@@ -1,0 +1,224 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json, experiments/hillclimb/*.json and
+experiments/benchmarks/*.json. Idempotent: replaces the placeholder /
+previously generated blocks between the <!-- X --> markers.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MD = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def load(pattern):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, pattern))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def bench_section() -> str:
+    lines = []
+    res = {os.path.basename(f)[:-5]: json.load(open(f))
+           for f in glob.glob(os.path.join(ROOT, "experiments/benchmarks/*.json"))}
+
+    if "table1_accuracy" in res:
+        lines += ["### Table 1 — accuracy vs baselines (synthetic stand-ins)",
+                  "", "| method | label-skew | domain-shift |", "|---|---|---|"]
+        rows = res["table1_accuracy"]
+        methods = []
+        for r in rows:
+            if r["method"] not in methods:
+                methods.append(r["method"])
+        for m in methods:
+            def cell(d):
+                r = next((x for x in rows if x["method"] == m
+                          and x["distribution"] == d), None)
+                return f"{r['acc_mean']:.3f}±{r['acc_std']:.3f}" if r else "—"
+            lines.append(f"| {m} | {cell('label-skew')} | {cell('domain-shift')} |")
+        lines += ["", "Claim check: FedELMY tops both columns; SFL methods "
+                  "(MetaFed/FedSeq/FedELMY) ≫ one-shot PFL methods — same "
+                  "ordering as the paper's Table 1.", ""]
+
+    def simple_table(key, title, cols, claim=""):
+        if key not in res:
+            return []
+        rows = res[key]
+        if isinstance(rows, dict):
+            rows = [rows]
+        out = [f"### {title}", "", "| " + " | ".join(cols) + " |",
+               "|" + "---|" * len(cols)]
+        for r in rows:
+            out.append("| " + " | ".join(
+                f"{r.get(c):.3f}" if isinstance(r.get(c), float)
+                else str(r.get(c)) for c in cols) + " |")
+        if claim:
+            out += ["", claim]
+        out.append("")
+        return out
+
+    lines += simple_table("table2_fewshot", "Table 2 — few-shot scaling",
+                          ["shots", "fedelmy", "fedseq"],
+                          "Claim check: FedELMY ≥ FedSeq at every shot count.")
+    lines += simple_table("table3_ablation", "Table 3 — pool / d1 / d2 ablation",
+                          ["variant", "acc_mean", "acc_std"],
+                          "Claim check: pool M alone beats FedSeq (+0.24); "
+                          "d1 and d2 each add over M-only; M+d2 and M+d1+d2 "
+                          "are within noise of each other at this task's "
+                          "ceiling (paper Table 3 direction).")
+    lines += simple_table("table4_order", "Table 4 — client order robustness",
+                          ["order", "fedelmy", "fedseq"],
+                          "Claim check: FedELMY beats FedSeq for every "
+                          "domain order.")
+    lines += simple_table("fig5_comm_cost", "Fig. 5 — communication cost "
+                          "(N=10, measured serialized checkpoints)",
+                          ["arch", "method", "model_mb", "total_mb"],
+                          "Claim check: FedELMY/FedSeq = (N−1)·M is the "
+                          "minimum; mesh-gossip PFL is ~N× worse.")
+    lines += simple_table("fig6_compute_matched", "Fig. 6 — compute-matched",
+                          ["method", "local_steps_per_client", "acc"],
+                          "Claim check (partial): both saturate at the "
+                          "ceiling under equal S·E_local compute; at the "
+                          "paper-default budget (last row) FedSeq is "
+                          "clearly behind.")
+    lines += simple_table("fig9_distance_measures", "Fig. 9 — distance "
+                          "measures", ["measure", "acc"],
+                          "Claim check (partial): every measure reaches the "
+                          "task ceiling here, so the paper's L2-beats-others "
+                          "ranking is not resolvable at this scale; L1 is "
+                          "marginally worse, consistent with the paper.")
+    if "fig10_pool_heatmap" in res:
+        r = res["fig10_pool_heatmap"]
+        lines += ["### Fig. 10 — final-client pool pairwise L2 distances", "",
+                  f"pool size {r['pool_size']}, off-diagonal mean "
+                  f"{r['offdiag_mean']:.3f}, std {r['offdiag_std']:.3f} "
+                  f"(coefficient of variation {r['offdiag_cv']:.2f}) — "
+                  "non-degenerate diversity, no monotone trend "
+                  f"(full matrix in experiments/benchmarks/fig10_pool_heatmap.json).", ""]
+    lines += simple_table("table9_pfl", "Table 9 — decentralized-PFL "
+                          "adaptation", ["method", "acc"],
+                          "Claim check (partial): all PFL variants land far "
+                          "below the SFL variant (reproduces the paper's "
+                          "main point); FedELMY(PFL) *trails* the PFL "
+                          "baselines at this step budget, whereas the paper "
+                          "shows it winning 3 of 4 datasets — independent "
+                          "per-client inits + short training favor the "
+                          "momentum/SAM baselines here.")
+    return "\n".join(lines)
+
+
+def dryrun_section() -> str:
+    recs = load("experiments/dryrun/*.json")
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    lines = [f"**{len(ok)} / {len(recs)} combinations lower + compile** on "
+             "their assigned meshes (the remaining "
+             f"{len(sk)} are the documented long_500k carve-outs). "
+             "Compile wall-times 2–180 s on the CPU host. Per-combo "
+             "artifacts: `experiments/dryrun/*.json`.", "",
+             "Peak per-device memory (arguments + XLA temp) for the "
+             "heaviest shapes, baseline configuration:", "",
+             "| arch | shape | mesh | args GB | temp GB |", "|---|---|---|---|---|"]
+    heavy = sorted(ok, key=lambda r: -(r["memory"]["peak_bytes"] or 0))[:8]
+    for r in heavy:
+        m = r["memory"]
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                     f"{m['argument_bytes']/1e9:.1f} | "
+                     f"{m['temp_bytes']/1e9:.1f} |")
+    lines += ["", "Baseline temp memory for train/prefill shapes exceeds "
+              "v5e HBM — driven down in §Perf (activation-sharding "
+              "constraints + microbatching); decode shapes fit as-is.", ""]
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    recs = [r for r in load("experiments/dryrun/*.json")
+            if r["status"] == "ok"]
+    lines = [
+        "Three terms in seconds/step/device (trip-corrected; memory term is "
+        "the pre-fusion upper bound — see methodology note 2). "
+        "`useful` = MODEL_FLOPS(6·N·D or 6·N_active·D; 2· for serving) / "
+        "corrected HLO FLOPs.", "",
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful |", "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["shape"], r["arch"], r["mesh"])):
+        rl = r["roofline"]
+        u = r["useful_flops_ratio"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{rl['compute_s']:.2e} | {rl['memory_s']:.2e} | "
+            f"{rl['collective_s']:.2e} | {r['dominant']} | "
+            f"{min(u, 99):.2f} |")
+    # per-row bottleneck notes
+    lines += ["", "Reading the table (baseline, before §Perf):", "",
+        "* **train_4k / prefill_32k are collective- or memory-bound across "
+        "the board** — root cause isolated in §Perf: GSPMD reshards "
+        "activations to batch-replicated/feature-sharded inside FFN layers "
+        "(multi-GB all-reduce + collective-permute per layer) unless "
+        "activations are pinned batch-sharded. What moves the dominant term "
+        "down: activation sharding constraints (then microbatching for the "
+        "memory term).",
+        "* **decode shapes are memory-bound** (as expected at batch ≤128: "
+        "one token reads all params + the KV cache) — the memory term is "
+        "the KV/latent-cache sweep; what would move it down is cache "
+        "quantization (int8) or MLA-style latent caches (deepseek row "
+        "already shows ~5× lower memory term than same-size dense).",
+        "* **SSM/hybrid long_500k rows** show bounded state advantage: "
+        "rwkv6/zamba2 at 500k context decode cost ≈ their 32k cost "
+        "(state-size-bound, not context-bound); llama3.2-1b's ring-buffer "
+        "sliding window caps its long-context decode at window size.",
+        "* `useful` ≪ 1 on baseline train rows is replicated-compute waste "
+        "(same GSPMD pathology), not remat: after the §Perf fix, "
+        "useful ≈ 0.76 (qwen2-72b) / 0.78 (qwen2-7b) with remat's ~1.33x "
+        "as the remaining gap.", ""]
+    # optimized re-sweep
+    opts = [r for r in load("experiments/hillclimb/*__opt*.json")
+            if r["status"] == "ok"]
+    if opts:
+        lines += ["### Optimized train_4k re-sweep (beyond-paper config: "
+                  "act-shard constraints + microbatch=4)", "",
+                  "| arch | mesh | compute s | memory s | collective s | "
+                  "dominant | temp GB |", "|---|---|---|---|---|---|---|"]
+        for r in sorted(opts, key=lambda r: (r["arch"], r["mesh"])):
+            rl = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['mesh']} | {rl['compute_s']:.2e} | "
+                f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | "
+                f"{r['dominant']} | {r['memory']['temp_bytes']/1e9:.1f} |")
+        lines += ["", "(microbatch grad-accumulation loop is itself a scan "
+                  "counted once — compute/collective terms here are ~4x "
+                  "under-reported; compare temp GB and the ratio structure, "
+                  "or the per-pair §Perf ladders which hold microbatch "
+                  "fixed.)", ""]
+    return "\n".join(lines)
+
+
+def splice(md: str, marker: str, content: str) -> str:
+    start = md.index(f"<!-- {marker} -->")
+    end_tag = f"<!-- END {marker} -->"
+    if end_tag in md:
+        end = md.index(end_tag) + len(end_tag)
+    else:
+        nxt = md.find("\n## ", start)
+        end = nxt if nxt != -1 else len(md)
+    return (md[:start] + f"<!-- {marker} -->\n" + content +
+            f"\n{end_tag}\n\n" + md[end:].lstrip("\n"))
+
+
+def main():
+    with open(MD) as f:
+        md = f.read()
+    md = splice(md, "BENCH_RESULTS", bench_section())
+    md = splice(md, "DRYRUN_SUMMARY", dryrun_section())
+    md = splice(md, "ROOFLINE_TABLE", roofline_section())
+    with open(MD, "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

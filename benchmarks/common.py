@@ -1,0 +1,115 @@
+"""Shared harness for the paper-table benchmarks.
+
+Each benchmarks/tableX_*.py module reproduces one paper table/figure on the
+synthetic non-IID datasets (see DESIGN.md §1 — offline stand-ins for
+CIFAR-10 / PACS), at a scale that runs on this CPU host in minutes. The
+*claim structure* (method orderings, ablation directions) is what is
+validated; absolute accuracies are dataset-dependent.
+
+Scale knobs are centralized here; benchmarks.run --quick shrinks them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import FedConfig, get_arch
+from repro.data import (batch_iterator, dirichlet_partition,
+                        domain_shift_partition, make_domain_datasets,
+                        make_image_dataset)
+from repro.models import build_model
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "benchmarks")
+
+# scale preset: (n_samples, n_test, e_local, e_warmup, pool_size)
+SCALES = {
+    "full": dict(n=2400, n_test=800, e_local=14, e_w=7, S=3, batch=64),
+    "quick": dict(n=1500, n_test=400, e_local=8, e_w=4, S=2, batch=48),
+}
+SCALE = dict(SCALES["full"])
+NOISE = 2.5
+
+
+def set_scale(name: str):
+    SCALE.clear()
+    SCALE.update(SCALES[name])
+
+
+def fed_config(**kw) -> FedConfig:
+    base = dict(n_clients=4, pool_size=SCALE["S"], e_local=SCALE["e_local"],
+                e_warmup=SCALE["e_w"], learning_rate=1e-3, alpha=0.06,
+                beta=1.0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def label_skew_setup(n_clients=4, beta=0.3, seed=0):
+    """CIFAR-10 stand-in with Dirichlet(beta) label skew."""
+    cfg = get_arch("paper-cnn")
+    model = build_model(cfg)
+    ds = make_image_dataset(SCALE["n"], seed=seed, noise=NOISE)
+    test = make_image_dataset(SCALE["n_test"], seed=seed + 91, noise=NOISE)
+    parts = dirichlet_partition(ds.labels, n_clients, beta, seed=seed)
+    iters = [batch_iterator({"images": ds.images[p], "labels": ds.labels[p]},
+                            SCALE["batch"], seed=seed * 100 + i)
+             for i, p in enumerate(parts)]
+    return model, iters, _acc_fn(model, test)
+
+
+def domain_shift_setup(n_clients=4, seed=0, order=("photo", "art", "cartoon",
+                                                   "sketch")):
+    """PACS stand-in: one synthetic domain per client."""
+    cfg = get_arch("paper-cnn")
+    model = build_model(cfg)
+    doms = make_domain_datasets(SCALE["n"] // 4, seed=seed, noise=NOISE * 0.8)
+    clients = domain_shift_partition(doms, n_clients, order=order, seed=seed)
+    test_doms = make_domain_datasets(SCALE["n_test"] // 4, seed=seed + 91,
+                                     noise=NOISE * 0.8)
+    test_imgs = np.concatenate([d.images for d in test_doms.values()])
+    test_labels = np.concatenate([d.labels for d in test_doms.values()])
+    from repro.data.synthetic import SyntheticImageDataset
+    test = SyntheticImageDataset(test_imgs, test_labels, 10)
+    iters = [batch_iterator({"images": c.images, "labels": c.labels},
+                            min(SCALE["batch"], len(c.labels)),
+                            seed=seed * 100 + i)
+             for i, c in enumerate(clients)]
+    return model, iters, _acc_fn(model, test)
+
+
+def _acc_fn(model, test):
+    imgs = jnp.asarray(test.images)
+    labels = jnp.asarray(test.labels)
+
+    @jax.jit
+    def acc(params):
+        # batched eval to bound memory
+        n = imgs.shape[0] - imgs.shape[0] % 100
+        xs = imgs[:n].reshape(-1, 100, *imgs.shape[1:])
+        ls = labels[:n].reshape(-1, 100)
+
+        def body(c, xy):
+            x, y = xy
+            logits = model.forward(params, {"images": x})
+            return c + jnp.sum(jnp.argmax(logits, -1) == y), None
+        tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.int32), (xs, ls))
+        return tot / n
+    return acc
+
+
+def save_result(name: str, rows):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+def emit_csv(name: str, t0: float, derived: str):
+    """`name,us_per_call,derived` line per the harness contract."""
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived}", flush=True)

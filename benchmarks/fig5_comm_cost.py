@@ -1,0 +1,61 @@
+"""Paper Fig. 5: communication cost per method, N=10 clients, measured on
+the actual serialized handoff artifacts (ResNet-18 in the paper, M=46.2MB;
+here the paper CNN + the llama3.2-1b LLM arch for the production regime).
+
+Analytic counts (paper §4.3.1):
+  FedELMY / FedSeq : (N−1)·M       MetaFed: (2N−1)·M
+  DENSE / FedOV    : N·M           DFedAvgM/DFedSAM (mesh, one round): N·(N−1)·M
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit_csv, save_result
+from repro.checkpoint import save_pytree
+from repro.configs import get_arch
+from repro.models import build_model
+
+N = 10
+
+
+def _model_bytes(arch: str) -> int:
+    cfg = get_arch(arch)
+    model = build_model(cfg if arch == "paper-cnn" else cfg.reduced())
+    params = model.init(jax.random.PRNGKey(0))
+    path = "/tmp/_commcost.npz"
+    save_pytree(path, params)
+    size = os.path.getsize(path)
+    os.remove(path)
+    return size
+
+
+def run():
+    t0 = time.time()
+    rows = []
+    for arch in ("paper-cnn", "llama3.2-1b"):
+        m_bytes = _model_bytes(arch)
+        costs = {
+            "FedELMY": (N - 1) * m_bytes,
+            "FedSeq": (N - 1) * m_bytes,
+            "MetaFed": (2 * N - 1) * m_bytes,
+            "DENSE/FedOV (server)": N * m_bytes,
+            "DFedAvgM/DFedSAM (mesh)": N * (N - 1) * m_bytes,
+        }
+        for method, c in costs.items():
+            rows.append({"arch": arch, "method": method,
+                         "model_mb": m_bytes / 1e6, "total_mb": c / 1e6})
+        print(f"  fig5 {arch}: M={m_bytes/1e6:.1f}MB, "
+              f"FedELMY={(N-1)*m_bytes/1e6:.1f}MB "
+              f"(mesh={N*(N-1)*m_bytes/1e6:.0f}MB)", flush=True)
+    save_result("fig5_comm_cost", rows)
+    emit_csv("fig5_comm_cost", t0,
+             f"fedelmy_is_min={all(r['total_mb'] >= rows[0]['total_mb'] for r in rows if r['arch']=='paper-cnn')}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

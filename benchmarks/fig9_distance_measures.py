@@ -1,0 +1,37 @@
+"""Paper Fig. 9: diversity-control measure ablation (L2 vs L1 vs cosine vs
+squared-L2/moment). Claim: L2 best, all beat the no-regularizer pool."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
+                               save_result)
+from repro.core import run_fedelmy
+
+MEASURES = ("l2", "l1", "cosine", "squared_l2")
+
+
+def run():
+    t0 = time.time()
+    rows = []
+    for measure in MEASURES + ("none",):
+        model, iters, acc = label_skew_setup(seed=0)
+        if measure == "none":
+            fed = fed_config(use_d1=False, use_d2=False)
+        else:
+            fed = fed_config(distance_measure=measure)
+        m, _ = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0))
+        a = float(acc(m))
+        rows.append({"measure": measure, "acc": a})
+        print(f"  fig9 {measure:10s} {a:.3f}", flush=True)
+    save_result("fig9_distance_measures", rows)
+    best = max(rows, key=lambda r: r["acc"])
+    emit_csv("fig9_distance_measures", t0, f"best={best['measure']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Roofline benchmark: aggregates the dry-run JSONs (launch/dryrun.py must
+have run) into the EXPERIMENTS.md §Roofline table — one row per
+(arch × shape × mesh) with the three terms, dominant bottleneck, and
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import emit_csv, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run():
+    t0 = time.time()
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    rows = []
+    for r in ok:
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": r["dominant"],
+            "useful_flops_ratio": r.get("useful_flops_ratio"),
+            "peak_bytes_per_dev": r["memory"].get("peak_bytes"),
+        })
+        print(f"  {r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+              f"dom={r['dominant']:10s} "
+              f"C={rl['compute_s']:.2e} M={rl['memory_s']:.2e} "
+              f"X={rl['collective_s']:.2e} "
+              f"useful={r.get('useful_flops_ratio', 0):.2f}", flush=True)
+    save_result("roofline_report", rows)
+    emit_csv("roofline_report", t0,
+             f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}")
+    if errors:
+        for e in errors:
+            print(f"  ERROR {e['arch']} {e['shape']} {e['mesh']}: "
+                  f"{e['error'][:120]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (harness contract).
+
+  PYTHONPATH=src python -m benchmarks.run            # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-scale
+  PYTHONPATH=src python -m benchmarks.run --only table1_accuracy
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced scale (smoke)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import common
+    if args.quick:
+        common.set_scale("quick")
+
+    from benchmarks import (fig5_comm_cost, fig6_compute_matched,
+                            fig9_distance_measures, fig10_pool_heatmap,
+                            roofline_report, table1_accuracy, table2_fewshot,
+                            table3_ablation, table4_order, table9_pfl)
+    suite = {
+        "table1_accuracy": table1_accuracy.run,
+        "table2_fewshot": table2_fewshot.run,
+        "table3_ablation": table3_ablation.run,
+        "table4_order": table4_order.run,
+        "fig5_comm_cost": fig5_comm_cost.run,
+        "fig6_compute_matched": fig6_compute_matched.run,
+        "fig9_distance_measures": fig9_distance_measures.run,
+        "fig10_pool_heatmap": fig10_pool_heatmap.run,
+        "table9_pfl": table9_pfl.run,
+        "roofline_report": roofline_report.run,
+    }
+    names = [args.only] if args.only else list(suite)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            suite[name]()
+        except Exception:                       # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Quickstart: one-shot sequential FedELMY on synthetic non-IID data.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Four clients hold Dirichlet(0.3)-skewed shards of a 10-class image task;
+the model chain visits each client once (one-shot SFL). Each client trains
+a pool of S=3 models under the d1/d2 diversity objective (paper Eq. 9) and
+forwards the pool average. Compare the final accuracy against FedSeq (the
+same chain without the diversity machinery).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import FedConfig, get_arch
+from repro.core import run_fedelmy
+from repro.core.baselines import run_fedseq
+from repro.data import batch_iterator, dirichlet_partition, make_image_dataset
+from repro.models import build_model
+
+
+def main():
+    model = build_model(get_arch("paper-cnn"))
+    train = make_image_dataset(n_samples=4000, seed=0, noise=2.5)
+    test = make_image_dataset(n_samples=1000, seed=7, noise=2.5)
+    parts = dirichlet_partition(train.labels, n_clients=4, beta=0.3, seed=0)
+    print("client shard sizes:", [len(p) for p in parts])
+    iters = [batch_iterator({"images": train.images[p],
+                             "labels": train.labels[p]}, 64, seed=i)
+             for i, p in enumerate(parts)]
+
+    @jax.jit
+    def accuracy(params):
+        logits = model.forward(params, {"images": jnp.asarray(test.images)})
+        return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(test.labels))
+
+    fed = FedConfig(n_clients=4, pool_size=3, e_local=25, e_warmup=10,
+                    learning_rate=1e-3, alpha=0.06, beta=1.0)
+
+    m_final, history = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0),
+                                   eval_fn=accuracy)
+    for h in history:
+        print(f"after client {h['client']}: global acc {h['global_acc']:.3f}")
+    print(f"FedELMY final accuracy: {float(accuracy(m_final)):.3f}")
+
+    m_seq = run_fedseq(model, iters, fed, jax.random.PRNGKey(0))
+    print(f"FedSeq  final accuracy: {float(accuracy(m_seq)):.3f}")
+    print("communication: both methods used exactly N-1 = 3 model transfers")
+
+
+if __name__ == "__main__":
+    main()

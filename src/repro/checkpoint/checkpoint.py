@@ -1,0 +1,45 @@
+"""Minimal pytree checkpointing (npz container, flattened key paths).
+
+This is the client→client model-transfer format too: FedELMY's handoff of
+m_avg^i is literally a save_pytree/load_pytree round-trip when clients are
+separate processes (examples/fedelmy_train.py uses the in-memory path; the
+launcher's --handoff-dir exercises this one).
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for p, leaf in leaves_with_path:
+        key = SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

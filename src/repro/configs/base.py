@@ -1,0 +1,166 @@
+"""Architecture / run configuration dataclasses.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG``; the registry in ``__init__`` maps ``--arch <id>`` to it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 64          # N (per-channel state) for Mamba2
+    head_dim: int = 64            # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 128
+    kind: str = "mamba2"          # "mamba2" | "rwkv6"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid: apply one shared attention block every `shared_attn_every` layers
+    shared_attn_every: int = 0
+    # enc-dec
+    n_encoder_layers: int = 0
+    # sliding-window attention (0 = full attention). Enables long_500k decode.
+    sliding_window: int = 0
+    # dtype for params in the dry-run / production config
+    param_dtype: str = "bfloat16"
+    # activation checkpointing: recompute each scanned layer in backward.
+    # §Perf iteration 1 — the no-remat baseline stores every scan activation
+    # (O(L) blowup, ~18 TB/device for qwen2-72b train_4k); remat bounds peak
+    # temp at ~one layer's activations for a ~1.33x FLOP overhead.
+    remat: bool = True
+    source: str = ""              # citation
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True if serve_step at 500k context is sub-quadratic / bounded-state."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0
+
+    def reduced(self) -> "ArchConfig":
+        """A smoke-test-sized variant of the same family (<=2 layers, d<=512)."""
+        kw = dataclasses.asdict(self)
+        kw["n_layers"] = min(2, self.n_layers)
+        d = min(256, self.d_model)
+        heads = min(4, self.n_heads)
+        kv = max(1, min(self.n_kv_heads, heads))
+        # keep heads % kv == 0
+        while heads % kv:
+            kv -= 1
+        kw.update(d_model=d, n_heads=heads, n_kv_heads=kv,
+                  d_ff=min(512, self.d_ff), vocab_size=min(1024, self.vocab_size),
+                  head_dim=d // heads, param_dtype="float32")
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(n_experts=min(4, self.moe.n_experts),
+                                  top_k=min(2, self.moe.top_k),
+                                  d_ff_expert=min(128, self.moe.d_ff_expert),
+                                  n_shared_experts=min(1, self.moe.n_shared_experts))
+        else:
+            kw["moe"] = None
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(kv_lora_rank=64, qk_rope_dim=16,
+                                  qk_nope_dim=32, v_head_dim=32)
+            kw["head_dim"] = None
+        else:
+            kw["mla"] = None
+        if self.ssm is not None:
+            kw["ssm"] = MLAConfig  # placeholder replaced below
+            kw["ssm"] = SSMConfig(state_size=min(16, self.ssm.state_size),
+                                  head_dim=min(32, self.ssm.head_dim),
+                                  expand=2, conv_width=4, chunk_size=32,
+                                  kind=self.ssm.kind)
+        else:
+            kw["ssm"] = None
+        if self.shared_attn_every:
+            kw["shared_attn_every"] = 1
+        if self.n_encoder_layers:
+            kw["n_encoder_layers"] = min(2, self.n_encoder_layers)
+        if self.sliding_window:
+            kw["sliding_window"] = 64
+        return ArchConfig(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """FedELMY hyper-parameters (paper Alg. 1 notation)."""
+    n_clients: int = 10
+    pool_size: int = 5            # S
+    e_local: int = 200            # E_local (steps in our step-based trainer)
+    e_warmup: int = 30            # E_w
+    alpha: float = 0.06           # d1 scale
+    beta: float = 1.0             # d2 scale
+    learning_rate: float = 5e-5
+    weight_decay: float = 1e-4
+    optimizer: str = "adam"
+    distance_measure: str = "l2"  # l2 | l1 | cosine | squared_l2
+    use_d1: bool = True
+    use_d2: bool = True
+    use_pool: bool = True         # ablation: pool vs single model
+    log_scale_distances: bool = True
+    moment_form: bool = False     # beyond-paper memory-efficient pool stats
+    seed: int = 0

@@ -1,0 +1,17 @@
+"""Zamba2-7B [arXiv:2411.15242] — 81 Mamba2 layers + shared attention block.
+
+Zamba2 interleaves a *shared* (weight-tied) attention+MLP block with the
+Mamba2 backbone. We apply the shared GQA block every 27 layers (3
+applications over 81 layers), weight-tied, matching the paper's
+parameter-efficient shared-block idea.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b", family="hybrid",
+    n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+    d_ff=14336, vocab_size=32000,
+    ssm=SSMConfig(state_size=64, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=128, kind="mamba2"),
+    shared_attn_every=27, source="arXiv:2411.15242",
+)

@@ -1,0 +1,125 @@
+"""The FedELMY model pool (paper §3.2).
+
+Two representations:
+
+* ``ModelPool`` — paper-faithful: the pool is a stacked pytree with a fixed
+  capacity (S+1) and a member count; every member's full parameters are kept
+  (cost (S+1)·M). Averaging (Eq. 5/6) is a masked mean over the stack axis —
+  collective-free under pjit because members share one sharding.
+
+* ``MomentPool`` — beyond-paper memory-efficient form: keeps only the
+  running member mean μ, the member count n, and the scalar mean of squared
+  member norms q = (1/n)Σ_t ||w_t||². This supports the squared-L2 diversity
+  regularizer exactly:
+
+      mean_t ||w − w_t||² = ||w||² − 2⟨w, μ⟩ + q
+
+  shrinking pool memory from (S+1)·M to M + O(1) (enables 70B-scale pools;
+  see DESIGN.md §3 and EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+F32 = jnp.float32
+
+
+def tree_zeros_like_stacked(params: PyTree, capacity: int) -> PyTree:
+    return jax.tree.map(
+        lambda p: jnp.zeros((capacity,) + p.shape, p.dtype), params)
+
+
+def tree_set_member(stack: PyTree, params: PyTree, idx) -> PyTree:
+    return jax.tree.map(
+        lambda s, p: jax.lax.dynamic_update_index_in_dim(
+            s, p.astype(s.dtype), idx, 0), stack, params)
+
+
+def tree_get_member(stack: PyTree, idx) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.lax.dynamic_index_in_dim(s, idx, 0, keepdims=False),
+        stack)
+
+
+class ModelPool(NamedTuple):
+    """Paper-faithful pool. `members`: stacked pytree (capacity leading axis);
+    `count`: int32 scalar (live members). Capacity is the static leading dim
+    of every member leaf (kept out of the pytree so jit sees it as static)."""
+    members: PyTree
+    count: jax.Array
+
+    @classmethod
+    def create(cls, m0: PyTree, capacity: int) -> "ModelPool":
+        stack = tree_zeros_like_stacked(m0, capacity)
+        stack = tree_set_member(stack, m0, 0)
+        return cls(stack, jnp.int32(1))
+
+    @property
+    def capacity(self) -> int:
+        return jax.tree.leaves(self.members)[0].shape[0]
+
+    def append(self, params: PyTree) -> "ModelPool":
+        return self._replace(
+            members=tree_set_member(self.members, params, self.count),
+            count=self.count + 1)
+
+    def mask(self) -> jax.Array:
+        return (jnp.arange(self.capacity) < self.count).astype(F32)
+
+    def average(self) -> PyTree:
+        """Eq. 5/6: masked mean over live members."""
+        w = self.mask() / self.count.astype(F32)
+
+        def avg(s):
+            wf = w.reshape((self.capacity,) + (1,) * (s.ndim - 1))
+            return jnp.sum(s.astype(F32) * wf, axis=0).astype(s.dtype)
+        return jax.tree.map(avg, self.members)
+
+    def first(self) -> PyTree:
+        """m_0^i — the d2 anchor."""
+        return tree_get_member(self.members, 0)
+
+
+class MomentPool(NamedTuple):
+    """Moment-form pool statistics (squared-L2 regularizer only)."""
+    mean: PyTree           # μ, f32
+    sq_norm_mean: jax.Array  # q = mean_t ||w_t||², f32 scalar
+    count: jax.Array
+    anchor: PyTree         # m_0^i (kept exactly — d2 needs it)
+
+    @classmethod
+    def create(cls, m0: PyTree) -> "MomentPool":
+        mean = jax.tree.map(lambda p: p.astype(F32), m0)
+        q = _sq_norm(m0)
+        return cls(mean, q, jnp.int32(1), m0)
+
+    def append(self, params: PyTree) -> "MomentPool":
+        n = self.count.astype(F32)
+        new_mean = jax.tree.map(
+            lambda m, p: (m * n + p.astype(F32)) / (n + 1), self.mean, params)
+        new_q = (self.sq_norm_mean * n + _sq_norm(params)) / (n + 1)
+        return MomentPool(new_mean, new_q, self.count + 1, self.anchor)
+
+    def average(self) -> PyTree:
+        return jax.tree.map(lambda m, a: m.astype(a.dtype),
+                            self.mean, self.anchor)
+
+    def first(self) -> PyTree:
+        return self.anchor
+
+    def mean_sq_distance(self, params: PyTree) -> jax.Array:
+        """mean_t ||w − w_t||² = ||w||² − 2⟨w,μ⟩ + q (exact)."""
+        wsq = _sq_norm(params)
+        dot = sum(jnp.sum(p.astype(F32) * m)
+                  for p, m in zip(jax.tree.leaves(params),
+                                  jax.tree.leaves(self.mean)))
+        return jnp.maximum(wsq - 2.0 * dot + self.sq_norm_mean, 0.0)
+
+
+def _sq_norm(tree: PyTree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(x.astype(F32)))
+               for x in jax.tree.leaves(tree))

@@ -1,0 +1,10 @@
+from repro.data.partition import dirichlet_partition, domain_shift_partition
+from repro.data.synthetic import (SyntheticImageDataset, SyntheticTextDataset,
+                                  make_domain_datasets, make_image_dataset,
+                                  make_lm_dataset)
+from repro.data.pipeline import batch_iterator
+
+__all__ = ["dirichlet_partition", "domain_shift_partition",
+           "SyntheticImageDataset", "SyntheticTextDataset",
+           "make_image_dataset", "make_domain_datasets", "make_lm_dataset",
+           "batch_iterator"]

@@ -1,0 +1,29 @@
+"""Batching + device placement. Deterministic, epoch-reshuffled."""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def batch_iterator(arrays: Dict[str, np.ndarray], batch_size: int,
+                   seed: int = 0, drop_remainder: bool = True
+                   ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Infinite shuffled batch stream over a dict of equal-length arrays."""
+    n = len(next(iter(arrays.values())))
+    assert all(len(a) == n for a in arrays.values())
+    rng = np.random.default_rng(seed)
+    bs = min(batch_size, n)
+    while True:
+        perm = rng.permutation(n)
+        for s in range(0, n - bs + 1 if drop_remainder else n, bs):
+            idx = perm[s:s + bs]
+            yield {k: jnp.asarray(a[idx]) for k, a in arrays.items()}
+
+
+def image_batch(ds, idx=None):
+    if idx is None:
+        return {"images": ds.images, "labels": ds.labels}
+    return {"images": ds.images[idx], "labels": ds.labels[idx]}

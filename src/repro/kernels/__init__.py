@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three pieces (see EXAMPLE.md):
+  <name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrappers (interpret=True on CPU hosts)
+  ref.py    — pure-jnp oracles the tests assert_allclose against
+"""
+from repro.kernels import ops, ref
+from repro.kernels.chunk_scan import gla_chunk_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pool_distance import pool_distance_stats
+
+__all__ = ["ops", "ref", "flash_attention_pallas", "pool_distance_stats",
+           "gla_chunk_pallas"]

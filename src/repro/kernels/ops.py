@@ -1,0 +1,80 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container / the dry-run host) kernels run in interpret mode —
+the kernel body executes as jax ops, bit-identical math, no Mosaic. On TPU
+(`jax.default_backend() == "tpu"`) the same call sites compile the real
+kernels. `repro.models.*` uses the pure-jnp formulations by default and can
+be switched to these via config (use_pallas) — both paths share oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_scan import gla_chunk_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pool_distance import (distances_from_stats,
+                                         pool_distance_stats)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("measure",))
+def pool_distances(w_flat, pool_flat, *, measure="l2"):
+    """Fused per-member distances (FedELMY d1/d2 hot path)."""
+    stats = pool_distance_stats(w_flat, pool_flat, interpret=_interpret())
+    w_sq = jnp.sum(jnp.square(w_flat.astype(jnp.float32)))
+    return distances_from_stats(stats, w_sq, measure)
+
+
+def tree_pool_distances(params, pool_members, *, measure="l2"):
+    """Pytree front-end: flatten the live model and the stacked pool, then
+    one fused kernel call. pool_members: stacked pytree (C leading)."""
+    w = jnp.concatenate([x.reshape(-1).astype(jnp.float32)
+                         for x in jax.tree.leaves(params)])
+    pool = jnp.concatenate(
+        [x.reshape(x.shape[0], -1).astype(jnp.float32)
+         for x in jax.tree.leaves(pool_members)], axis=1)
+    return pool_distances(w, pool, measure=measure)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "pre"))
+def gla_chunked(q, k, v, log_decay, *, chunk: int, pre=False, bonus=None,
+                initial_state=None):
+    """Chunked GLA via the Pallas intra-chunk kernel, host scan over chunks.
+    Layouts match repro.models.ssm.gla_chunked: q,k (B,T,H,K); v (B,T,H,V);
+    log_decay (B,T,H[,K])."""
+    b, t, h, kd = q.shape
+    vd = v.shape[-1]
+    if log_decay.ndim == 3:
+        log_decay = log_decay[..., None]
+    assert t % chunk == 0
+    nc = t // chunk
+
+    def r(x):  # (B,T,H,*) -> (NC, B, H, L, *)
+        return x.reshape(b, nc, chunk, h, x.shape[-1]).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc, ldc = r(q), r(k), r(v), r(log_decay)
+    state = (jnp.zeros((b, h, kd, vd), jnp.float32) if initial_state is None
+             else initial_state)
+
+    def step(S, xs):
+        qx, kx, vx, ld = xs
+        lc = jnp.cumsum(ld.astype(jnp.float32), axis=2)
+        y, S = gla_chunk_pallas(qx, kx, vx, lc, S, pre=pre, bonus=bonus,
+                                interpret=_interpret())
+        return S, y
+
+    S, ys = jax.lax.scan(step, state, (qc, kc, vc, ldc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, vd)
+    return y, S

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the FedELMY pool-distance regularizers (Eq. 7–8).
+
+The framework-level hot spot: computing dist(m, m_t) for every pool member
+t means |M|+1 full sweeps over HBM if done naively (one per member, plus
+one for d2). This kernel fuses them: one blocked pass over the flattened
+parameter vector streams a (BP,) tile of the live model and the matching
+(C, BP) tile of the *stacked* pool through VMEM and accumulates, per member,
+the three sufficient statistics every supported measure needs:
+
+    sq[t]  = Σ (w − m_t)²      (L2 / squared-L2)
+    l1[t]  = Σ |w − m_t|       (L1)
+    dot[t] = Σ w·m_t           (cosine, with norms[t] = Σ m_t²)
+
+Arithmetic intensity is O(1) FLOP/byte — this is bandwidth-bound by design;
+the win is the C-way fusion of HBM sweeps (napkin math in EXPERIMENTS.md
+§Perf: pool C=6 → ~6× fewer HBM bytes than separate passes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_P = 65536          # 256 KiB f32 per member-row tile
+
+
+def _pd_kernel(w_ref, pool_ref, sq_ref, l1_ref, dot_ref, norm_ref, *,
+               n_blocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+        l1_ref[...] = jnp.zeros_like(l1_ref)
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+        norm_ref[...] = jnp.zeros_like(norm_ref)
+
+    w = w_ref[...].astype(jnp.float32)          # (1, BP)
+    m = pool_ref[...].astype(jnp.float32)       # (C, BP)
+    r = w - m
+    sq_ref[...] += jnp.sum(r * r, axis=1, keepdims=True)
+    l1_ref[...] += jnp.sum(jnp.abs(r), axis=1, keepdims=True)
+    dot_ref[...] += jnp.sum(w * m, axis=1, keepdims=True)
+    norm_ref[...] += jnp.sum(m * m, axis=1, keepdims=True)
+
+
+def pool_distance_stats(w_flat, pool_flat, *, block_p=BLOCK_P,
+                        interpret=False):
+    """w_flat: (P,) live model; pool_flat: (C, P) stacked pool members.
+    Returns dict of per-member stats: sq, l1, dot, norm — each (C,)."""
+    c, p = pool_flat.shape
+    pad = (-p) % block_p
+    if pad:
+        w_flat = jnp.pad(w_flat, (0, pad))
+        pool_flat = jnp.pad(pool_flat, ((0, 0), (0, pad)))
+    n_blocks = (p + pad) // block_p
+
+    kernel = functools.partial(_pd_kernel, n_blocks=n_blocks)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, block_p), lambda i: (0, i)),
+            pl.BlockSpec((c, block_p), lambda i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((c, 1), lambda i: (0, 0))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((c, 1), jnp.float32)] * 4,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(w_flat[None, :], pool_flat)
+    sq, l1, dot, norm = [o[:, 0] for o in outs]
+    return {"sq": sq, "l1": l1, "dot": dot, "norm": norm}
+
+
+def distances_from_stats(stats, w_sq_norm, measure: str):
+    """Per-member distances from fused stats. w_sq_norm = Σ w² (scalar)."""
+    if measure == "l2":
+        return jnp.sqrt(stats["sq"] + 1e-12)
+    if measure == "squared_l2":
+        return stats["sq"]
+    if measure == "l1":
+        return stats["l1"]
+    if measure == "cosine":
+        return 1.0 - stats["dot"] / (
+            jnp.sqrt(w_sq_norm + 1e-12) * jnp.sqrt(stats["norm"] + 1e-12))
+    raise ValueError(measure)

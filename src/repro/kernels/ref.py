@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the tests
+assert_allclose against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Dense softmax attention, f32. q: (B,Tq,H,hd); k,v: (B,Tk,KV,hd)."""
+    b, tq, h, hd = q.shape
+    tk, n_kv = k.shape[1], k.shape[2]
+    g = h // n_kv
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=2)
+    s = jnp.einsum("bthd,bshd->bhts", qf, kf)
+    q_pos = jnp.arange(tq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p, vf).astype(q.dtype)
+
+
+def pool_distance_ref(w_flat, pool_flat):
+    """Per-member stats over flattened params."""
+    w = w_flat.astype(jnp.float32)
+    m = pool_flat.astype(jnp.float32)
+    r = w[None, :] - m
+    return {"sq": jnp.sum(r * r, axis=1),
+            "l1": jnp.sum(jnp.abs(r), axis=1),
+            "dot": m @ w,
+            "norm": jnp.sum(m * m, axis=1)}
+
+
+def gla_recurrence_ref(q, k, v, log_decay, *, bonus=None, initial_state=None):
+    """Naive step-by-step recurrence (the semantic ground truth).
+
+    q, k: (B, T, H, K); v: (B, T, H, V); log_decay (B,T,H) or (B,T,H,K).
+    y_t = q_t · S_t (post) or q_t · (S_{t-1} + diag(u) k_t v_t) (pre+bonus).
+    """
+    b, t, h, kd = q.shape
+    vd = v.shape[-1]
+    if log_decay.ndim == 3:
+        log_decay = log_decay[..., None]
+    S = (jnp.zeros((b, h, kd, vd), jnp.float32) if initial_state is None
+         else initial_state.astype(jnp.float32))
+
+    def step(S, xs):
+        qt, kt, vt, ld = [x.astype(jnp.float32) for x in xs]
+        d = jnp.exp(ld)[..., None]                 # (B,H,K,1)
+        kv = kt[..., None] * vt[..., None, :]      # (B,H,K,V)
+        if bonus is None:
+            S = d * S + kv
+            y = jnp.einsum("bhk,bhkv->bhv", qt, S)
+        else:
+            y = jnp.einsum("bhk,bhkv->bhv", qt,
+                           S + bonus.astype(jnp.float32)[None, :, :, None] * kv)
+            S = d * S + kv
+        return S, y
+
+    xs = tuple(x.swapaxes(0, 1) for x in (q, k, v, log_decay))
+    S, ys = jax.lax.scan(step, S, xs)
+    return ys.swapaxes(0, 1).astype(v.dtype), S

@@ -1,0 +1,176 @@
+"""Step functions + ShapeDtypeStruct input specs for the dry-run and the
+real launcher.
+
+The lowered steps are:
+  train_4k    → fedelmy_train_step: task loss + d1/d2 regularizers (moment-
+                form pool statistics — the memory-feasible representation at
+                70B scale; see DESIGN.md §3) + Adam update.
+  prefill_32k → prefill_step: full-prompt forward, returns KV/SSM cache.
+  decode_*    → serve_step: ONE token against a seq_len cache.
+
+Everything here is pure shape/function plumbing — no device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.configs.base import ArchConfig, FedConfig, ShapeConfig
+from repro.core.distances import (d1_pool_distance, d2_anchor_distance,
+                                  log_scale)
+from repro.core.pool import ModelPool, MomentPool
+from repro.models import build_model
+from repro.optim import make_optimizer
+
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+
+def batch_specs_for(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, t = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": jax.ShapeDtypeStruct((b, t), I32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, t), I32)
+        if cfg.family == "encdec":
+            specs["src_embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), dt)
+        return specs
+    # decode: one token + cache of seq_len
+    return {"token": jax.ShapeDtypeStruct((b, 1), I32),
+            "pos": jax.ShapeDtypeStruct((), I32)}
+
+
+def cache_specs_for(cfg: ArchConfig, shape: ShapeConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch,
+                          shape.seq_len))
+
+
+def param_specs_for(cfg: ArchConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                fed: Optional[FedConfig] = None) -> Dict[str, Any]:
+    """Full kwargs spec for the step that `make_step` returns."""
+    fed = fed or FedConfig()
+    params = param_specs_for(cfg)
+    if shape.kind == "train":
+        opt = make_optimizer(fed.optimizer, fed.learning_rate,
+                             fed.weight_decay)
+        opt_state = jax.eval_shape(opt.init, params)
+        if os.environ.get("REPRO_POOL_FORM", "moment") == "exact":
+            # paper-faithful pool: S+1 stacked full copies
+            pool = jax.eval_shape(
+                lambda p: ModelPool.create(p, fed.pool_size + 1), params)
+        else:
+            pool = jax.eval_shape(lambda p: MomentPool.create(p), params)
+        return {"params": params, "opt_state": opt_state,
+                "batch": batch_specs_for(cfg, shape), "pool": pool,
+                "step": jax.ShapeDtypeStruct((), I32)}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_specs_for(cfg, shape)}
+    b = batch_specs_for(cfg, shape)
+    return {"params": params, "token": b["token"],
+            "cache": cache_specs_for(cfg, shape), "pos": b["pos"]}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: ArchConfig, shape: ShapeConfig,
+              fed: Optional[FedConfig] = None,
+              regularizers: bool = True):
+    """Returns step_fn(**input_specs(...)) for the given (arch, shape)."""
+    fed = fed or FedConfig()
+    model = build_model(cfg)
+
+    if shape.kind == "train":
+        opt = make_optimizer(fed.optimizer, fed.learning_rate,
+                             fed.weight_decay)
+
+        def _reg_terms(p, task, pool):
+            if isinstance(pool, ModelPool):
+                d1 = d1_pool_distance(p, pool, "l2")
+            else:
+                d1 = jnp.sqrt(pool.mean_sq_distance(p) + 1e-12)
+            d2 = d2_anchor_distance(p, pool.first(), "l2")
+            return (-fed.alpha * log_scale(d1, task)
+                    + fed.beta * log_scale(d2, task))
+
+        # §Perf: REPRO_MICROBATCH=N accumulates grads over N microbatches —
+        # peak activation temp scales ~1/N at no extra model FLOPs (the
+        # d1/d2 regularizer grads are computed once, not per microbatch).
+        n_micro = int(os.environ.get("REPRO_MICROBATCH", "1"))
+
+        def train_step(params, opt_state, batch, pool, step):
+            def task_loss(p, mb):
+                return model.loss_fn(p, mb)
+
+            if n_micro > 1:
+                mb_batch = jax.tree.map(
+                    lambda a: a.reshape(n_micro, a.shape[0] // n_micro,
+                                        *a.shape[1:]), batch)
+
+                def acc_step(carry, mb):
+                    g_acc, t_acc = carry
+                    t, g = jax.value_and_grad(task_loss)(params, mb)
+                    return (jax.tree.map(jnp.add, g_acc, g), t_acc + t), None
+
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (g_sum, t_sum), _ = jax.lax.scan(
+                    acc_step, (zero, jnp.zeros((), jnp.float32)), mb_batch)
+                task = t_sum / n_micro
+                grads = jax.tree.map(lambda g: g / n_micro, g_sum)
+                if regularizers:
+                    reg_grads = jax.grad(
+                        lambda p: _reg_terms(p, task, pool))(params)
+                    grads = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), grads,
+                        reg_grads)
+            else:
+                def full_loss(p):
+                    task = task_loss(p, batch)
+                    total = task
+                    if regularizers:
+                        total = total + _reg_terms(p, task, pool)
+                    return total, task
+                (_, task), grads = jax.value_and_grad(
+                    full_loss, has_aux=True)(params)
+            params, opt_state = opt.update(params, grads, opt_state, step)
+            return params, opt_state, task
+
+        return train_step
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+        return prefill_step
+
+    def serve_step(params, token, cache, pos):
+        return model.decode(params, token, cache, pos)
+    return serve_step
+
+
+def shape_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """The long_500k carve-out (DESIGN.md §4): decode at 500k runs only for
+    bounded-state / sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False, ("full-attention KV at 500k context — skipped per "
+                       "DESIGN.md (no sub-quadratic variant for this arch)")
+    if shape.kind in ("prefill", "decode") and cfg.family == "cnn":
+        return False, "classifier arch: no autoregressive serving"
+    return True, ""

@@ -1,0 +1,61 @@
+"""The paper's experimental model family: a 3-block CNN classifier
+(appendix D.5) used for the faithful FedELMY reproduction on synthetic
+CIFAR-shaped data. Pure JAX (lax.conv), NHWC layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import ACC, _he
+
+
+def _conv_init(key, c_in, c_out, k=3):
+    return {"w": _he(key, (k, k, c_in, c_out), jnp.float32,
+                     fan_in=k * k * c_in),
+            "b": jnp.zeros((c_out,), jnp.float32)}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def build_cnn(cfg: ArchConfig):
+    from repro.models.transformer import Model
+    width = cfg.d_model           # base conv width (64)
+    n_classes = cfg.vocab_size
+
+    def init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "c1": _conv_init(ks[0], 3, width),
+            "c2": _conv_init(ks[1], width, width * 2),
+            "c3": _conv_init(ks[2], width * 2, width * 4),
+            "fc1": {"w": _he(ks[3], (width * 4 * 16, cfg.d_ff), jnp.float32),
+                    "b": jnp.zeros((cfg.d_ff,), jnp.float32)},
+            "fc2": {"w": _he(ks[4], (cfg.d_ff, n_classes), jnp.float32),
+                    "b": jnp.zeros((n_classes,), jnp.float32)},
+        }
+
+    def forward(params, batch):
+        x = batch["images"].astype(jnp.float32)        # (B, 32, 32, 3)
+        for name in ("c1", "c2", "c3"):
+            x = jax.nn.relu(_conv(params[name], x))
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)                  # (B, 4*4*4w)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return Model(cfg, init, forward, loss_fn, None, None, None)

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, make_optimizer,
+                                    momentum, sgd)
+from repro.optim.sam import sam_update
+
+__all__ = ["Optimizer", "adam", "adamw", "momentum", "sgd", "make_optimizer",
+           "sam_update"]

@@ -1,0 +1,25 @@
+"""Sharpness-Aware Minimization — used by the DFedSAM baseline.
+
+sam_update wraps any base Optimizer: it perturbs params to the loss-ascent
+point (rho * g/||g||), recomputes grads there, and applies the base update
+with the perturbed gradient.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)) + 1e-12)
+
+
+def sam_update(loss_fn, params, batch, opt, opt_state, step, rho=0.05):
+    grads = jax.grad(loss_fn)(params, batch)
+    gn = _global_norm(grads)
+    eps = jax.tree.map(lambda g, p: (rho * g.astype(jnp.float32) / gn
+                                     ).astype(p.dtype), grads, params)
+    p_adv = jax.tree.map(lambda p, e: p + e, params, eps)
+    g_adv = jax.grad(loss_fn)(p_adv, batch)
+    return opt.update(params, g_adv, opt_state, step)

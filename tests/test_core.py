@@ -1,0 +1,200 @@
+"""FedELMY core unit + property tests (pool algebra, distances, Eq. 9 loss,
+log-scaling calibration), including hypothesis property-based invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FedConfig
+from repro.core import (ModelPool, MomentPool, d1_moment, d1_pool_distance,
+                        d2_anchor_distance, fedelmy_loss, log_scale,
+                        pairwise_distance)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"w": scale * jax.random.normal(k1, (17, 5)),
+            "b": scale * jax.random.normal(k2, (23,))}
+
+
+# ---------------------------------------------------------------------------
+# ModelPool algebra
+# ---------------------------------------------------------------------------
+
+def test_pool_average_equals_mean_of_members():
+    ps = [_params(jax.random.fold_in(KEY, i)) for i in range(4)]
+    pool = ModelPool.create(ps[0], capacity=6)
+    for p in ps[1:]:
+        pool = pool.append(p)
+    avg = pool.average()
+    gold = jax.tree.map(lambda *xs: np.mean(np.stack(xs), 0), *ps)
+    for a, g in zip(jax.tree.leaves(avg), jax.tree.leaves(gold)):
+        np.testing.assert_allclose(np.asarray(a), g, rtol=1e-6)
+
+
+def test_pool_first_is_anchor():
+    p0 = _params(KEY)
+    pool = ModelPool.create(p0, capacity=3).append(_params(jax.random.fold_in(KEY, 1)))
+    for a, g in zip(jax.tree.leaves(pool.first()), jax.tree.leaves(p0)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(g))
+
+
+def test_pool_unfilled_slots_do_not_leak():
+    p0 = _params(KEY)
+    pool = ModelPool.create(p0, capacity=8)   # 7 empty slots
+    avg = pool.average()
+    for a, g in zip(jax.tree.leaves(avg), jax.tree.leaves(p0)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(g), rtol=1e-6)
+
+
+@given(n=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_pool_count_tracks_appends(n):
+    pool = ModelPool.create(_params(KEY), capacity=8)
+    for i in range(n):
+        pool = pool.append(_params(jax.random.fold_in(KEY, i)))
+    assert int(pool.count) == n + 1
+    assert pool.mask().sum() == n + 1
+
+
+# ---------------------------------------------------------------------------
+# MomentPool exactness: moment identity == brute force (the beyond-paper
+# memory optimization must be *exact*, not approximate)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 5), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_moment_identity_matches_bruteforce(n, seed):
+    ps = [_params(jax.random.fold_in(KEY, 100 + seed * 10 + i))
+          for i in range(n)]
+    mpool = MomentPool.create(ps[0])
+    for p in ps[1:]:
+        mpool = mpool.append(p)
+    live = _params(jax.random.fold_in(KEY, 999 + seed))
+    got = float(mpool.mean_sq_distance(live))
+    brute = np.mean([float(pairwise_distance(live, p, "squared_l2"))
+                     for p in ps])
+    np.testing.assert_allclose(got, brute, rtol=1e-4)
+
+
+def test_moment_pool_average_matches_model_pool():
+    ps = [_params(jax.random.fold_in(KEY, i)) for i in range(3)]
+    mp = MomentPool.create(ps[0]).append(ps[1]).append(ps[2])
+    fp = ModelPool.create(ps[0], 4).append(ps[1]).append(ps[2])
+    for a, b in zip(jax.tree.leaves(mp.average()),
+                    jax.tree.leaves(fp.average())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Distances
+# ---------------------------------------------------------------------------
+
+def test_pairwise_distance_identity_is_zero():
+    p = _params(KEY)
+    for m in ("l2", "l1", "squared_l2"):
+        assert float(pairwise_distance(p, p, m)) < 1e-5
+    assert float(pairwise_distance(p, p, "cosine")) < 1e-5
+
+
+@given(scale=st.floats(0.1, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_l2_scales_linearly(scale):
+    a = _params(KEY)
+    b = jax.tree.map(jnp.zeros_like, a)
+    base = float(pairwise_distance(a, b, "l2"))
+    scaled = float(pairwise_distance(
+        jax.tree.map(lambda x: scale * x, a), b, "l2"))
+    np.testing.assert_allclose(scaled, scale * base, rtol=1e-4)
+
+
+def test_d1_is_masked_mean_over_members():
+    ps = [_params(jax.random.fold_in(KEY, i)) for i in range(3)]
+    pool = ModelPool.create(ps[0], capacity=5).append(ps[1]).append(ps[2])
+    live = _params(jax.random.fold_in(KEY, 9))
+    got = float(d1_pool_distance(live, pool, "l2"))
+    brute = np.mean([float(pairwise_distance(live, p, "l2")) for p in ps])
+    np.testing.assert_allclose(got, brute, rtol=1e-5)
+
+
+def test_symmetry():
+    a, b = _params(KEY), _params(jax.random.fold_in(KEY, 1))
+    for m in ("l2", "l1", "cosine", "squared_l2"):
+        np.testing.assert_allclose(float(pairwise_distance(a, b, m)),
+                                   float(pairwise_distance(b, a, m)),
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Log-scale calibration (appendix): result is one order below the task loss
+# ---------------------------------------------------------------------------
+
+@given(d=st.floats(1e-3, 1e6), loss=st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_log_scale_magnitude(d, loss):
+    scaled = float(log_scale(jnp.float32(d), jnp.float32(loss)))
+    # paper example: ℓ=6.02, d=45 → 0.45: scaled magnitude ∈ [ℓ/100, ℓ)
+    assert scaled <= loss * 1.000001
+    assert scaled > 0
+
+
+def test_log_scale_paper_example():
+    np.testing.assert_allclose(
+        float(log_scale(jnp.float32(45.0), jnp.float32(6.02))), 0.45,
+        rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 9 loss wiring: signs (−α d1, +β d2) and ablation flags
+# ---------------------------------------------------------------------------
+
+def _quad_loss(params, batch):
+    return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(params)) + 1.0
+
+
+def test_eq9_signs():
+    p0 = _params(KEY)
+    pool = ModelPool.create(p0, capacity=3).append(
+        _params(jax.random.fold_in(KEY, 1)))
+    live = _params(jax.random.fold_in(KEY, 2))
+    base = FedConfig(alpha=0.5, beta=0.5, log_scale_distances=False)
+    task = float(_quad_loss(live, None))
+    both, t1 = fedelmy_loss(_quad_loss, live, None, pool, base)
+    no_d1, _ = fedelmy_loss(_quad_loss, live, None, pool,
+                            FedConfig(alpha=0.5, beta=0.5, use_d1=False,
+                                      log_scale_distances=False))
+    no_d2, _ = fedelmy_loss(_quad_loss, live, None, pool,
+                            FedConfig(alpha=0.5, beta=0.5, use_d2=False,
+                                      log_scale_distances=False))
+    d1 = float(d1_pool_distance(live, pool, "l2"))
+    d2 = float(d2_anchor_distance(live, pool.first(), "l2"))
+    np.testing.assert_allclose(float(t1), task, rtol=1e-6)
+    np.testing.assert_allclose(float(both), task - 0.5 * d1 + 0.5 * d2,
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(no_d1), task + 0.5 * d2, rtol=1e-5)
+    np.testing.assert_allclose(float(no_d2), task - 0.5 * d1, rtol=1e-5)
+
+
+def test_d1_gradient_pushes_away_from_pool():
+    """∂(−d1)/∂m points away from pool members: a gradient step on −α·d1
+    must increase d1."""
+    p0 = _params(KEY)
+    pool = ModelPool.create(p0, capacity=2)
+    live = jax.tree.map(lambda x: x + 0.01, p0)
+    g = jax.grad(lambda p: -d1_pool_distance(p, pool, "l2"))(live)
+    stepped = jax.tree.map(lambda p, gr: p - 0.1 * gr, live, g)
+    assert float(d1_pool_distance(stepped, pool, "l2")) > \
+        float(d1_pool_distance(live, pool, "l2"))
+
+
+def test_d2_gradient_pulls_toward_anchor():
+    p0 = _params(KEY)
+    pool = ModelPool.create(p0, capacity=2)
+    live = jax.tree.map(lambda x: x + 1.0, p0)
+    g = jax.grad(lambda p: d2_anchor_distance(p, pool.first(), "l2"))(live)
+    stepped = jax.tree.map(lambda p, gr: p - 0.5 * gr, live, g)
+    assert float(d2_anchor_distance(stepped, pool.first(), "l2")) < \
+        float(d2_anchor_distance(live, pool.first(), "l2"))

@@ -1,0 +1,79 @@
+"""Data pipeline property tests (partitioners are exactly the paper's §4.1
+setups; hypothesis drives the invariants)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (batch_iterator, dirichlet_partition,
+                        domain_shift_partition, make_domain_datasets,
+                        make_image_dataset, make_lm_dataset)
+from repro.data.partition import train_val_split
+
+
+@given(n_clients=st.integers(2, 12), beta=st.sampled_from([0.1, 0.3, 0.5, 5.0]),
+       seed=st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_dirichlet_partition_is_exact_cover(n_clients, beta, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, size=500)
+    parts = dirichlet_partition(labels, n_clients, beta, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)          # disjoint + total
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_dirichlet_low_beta_is_skewed():
+    labels = np.random.default_rng(0).integers(0, 10, size=20000)
+    parts = dirichlet_partition(labels, 10, 0.1, seed=0)
+    # label marginals should differ strongly across clients at beta=0.1
+    dists = np.stack([np.bincount(labels[p], minlength=10) / len(p)
+                      for p in parts])
+    assert dists.max(0).min() > 2 * dists.min(0).max() or \
+        dists.std(0).mean() > 0.05
+
+
+def test_domain_shift_partition_round_robin():
+    doms = make_domain_datasets(n_per_domain=100)
+    clients = domain_shift_partition(doms, 8)
+    assert len(clients) == 8
+    total = sum(len(c.labels) for c in clients)
+    assert total == 4 * 100
+    # domains differ in feature statistics (that's the "shift")
+    m0 = clients[0].images.mean()
+    m1 = clients[1].images.mean()
+    assert abs(m0 - m1) > 1e-3
+
+
+def test_train_val_split_disjoint():
+    tr, va = train_val_split(100, 0.1, seed=3)
+    assert len(set(tr) & set(va)) == 0
+    assert len(tr) + len(va) == 100
+    assert len(va) == 10
+
+
+def test_shared_means_across_splits():
+    a = make_image_dataset(200, seed=0)
+    b = make_image_dataset(200, seed=1)
+    # same class structure: per-class means correlate strongly across splits
+    ma = np.stack([a.images[a.labels == c].mean(0) for c in range(10)])
+    mb = np.stack([b.images[b.labels == c].mean(0) for c in range(10)])
+    corr = np.corrcoef(ma.reshape(10, -1) @ mb.reshape(10, -1).T)
+    assert np.argmax(ma.reshape(10, -1) @ mb.reshape(10, -1).T, axis=1).tolist() \
+        == list(range(10))
+
+
+def test_batch_iterator_shapes_and_reshuffle():
+    ds = make_image_dataset(130, seed=0)
+    it = batch_iterator({"images": ds.images, "labels": ds.labels}, 32,
+                        seed=0)
+    b1 = next(it)
+    assert b1["images"].shape == (32, 32, 32, 3)
+    assert b1["labels"].shape == (32,)
+    seen = [np.asarray(next(it)["labels"]) for _ in range(8)]
+    assert not all(np.array_equal(seen[0], s) for s in seen[1:])
+
+
+def test_lm_dataset_markov_structure():
+    (ds,) = make_lm_dataset(n_seqs=64, seq_len=32, vocab=128)
+    assert ds.tokens.shape == (64, 33)
+    assert ds.tokens.min() >= 0 and ds.tokens.max() < 128

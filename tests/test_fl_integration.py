@@ -1,0 +1,125 @@
+"""Integration tests: the full FedELMY system end-to-end on synthetic
+non-IID data (CNN = the paper's setup; and the LLM path on a reduced arch).
+These validate the paper's *claims structure* at smoke scale — the full
+claims run lives in benchmarks/ (EXPERIMENTS.md §Paper-claims)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FedConfig, get_arch
+from repro.core import (BASELINES, run_fedelmy, run_fedelmy_fewshot,
+                        run_fedelmy_pfl)
+from repro.data import (batch_iterator, dirichlet_partition,
+                        make_image_dataset, make_lm_dataset)
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    cfg = get_arch("paper-cnn")
+    model = build_model(cfg)
+    ds = make_image_dataset(n_samples=1200, seed=0, noise=2.0)
+    test = make_image_dataset(n_samples=400, seed=5, noise=2.0)
+    parts = dirichlet_partition(ds.labels, 3, 0.3, seed=0)
+    iters = [batch_iterator({"images": ds.images[p], "labels": ds.labels[p]},
+                            48, seed=i) for i, p in enumerate(parts)]
+
+    @jax.jit
+    def acc(params):
+        logits = model.forward(params, {"images": jnp.asarray(test.images)})
+        return jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(test.labels))
+
+    return model, iters, acc
+
+
+FED = FedConfig(n_clients=3, pool_size=2, e_local=12, e_warmup=6,
+                learning_rate=1e-3)
+
+
+def test_fedelmy_beats_random_and_produces_history(cnn_setup):
+    model, iters, acc = cnn_setup
+    m, hist = run_fedelmy(model, iters, FED, KEY, eval_fn=acc)
+    a = float(acc(m))
+    assert a > 0.3, f"accuracy {a} barely above random"
+    assert len(hist) == 3
+    assert all(len(h["models"]) == FED.pool_size for h in hist)
+    leaves = jax.tree.leaves(m)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+
+
+def test_fedelmy_one_shot_communication_count(cnn_setup):
+    """One-shot SFL: the chain makes exactly N-1 handoffs (paper Fig. 5) —
+    verified structurally: history has N entries, each consuming the
+    previous client's average."""
+    model, iters, acc = cnn_setup
+    _, hist = run_fedelmy(model, iters, FED, KEY)
+    assert [h["client"] for h in hist] == [0, 1, 2]
+
+
+def test_client_order_permutation(cnn_setup):
+    model, iters, acc = cnn_setup
+    m, hist = run_fedelmy(model, iters, FED, KEY, order=[2, 0, 1])
+    assert [h["client"] for h in hist] == [2, 0, 1]
+    assert float(acc(m)) > 0.25
+
+
+def test_fewshot_improves_or_holds(cnn_setup):
+    model, iters, acc = cnn_setup
+    fed = dataclasses.replace(FED, e_local=8, pool_size=1)
+    _, hist = run_fedelmy_fewshot(model, iters, fed, KEY, shots=2,
+                                  eval_fn=acc)
+    assert len(hist) == 2
+    assert hist[-1]["global_acc"] >= hist[0]["global_acc"] - 0.1
+
+
+def test_baselines_run(cnn_setup):
+    model, iters, acc = cnn_setup
+    fed = dataclasses.replace(FED, e_local=6)
+    for name in ("fedseq", "dfedavgm", "metafed", "local_only"):
+        m = BASELINES[name](model, iters, fed, KEY)
+        assert np.isfinite(float(acc(m)))
+
+
+def test_pfl_adaptation_runs(cnn_setup):
+    model, iters, acc = cnn_setup
+    fed = dataclasses.replace(FED, e_local=5, pool_size=1, e_warmup=3)
+    m, hist = run_fedelmy_pfl(model, iters, fed, KEY, eval_fn=acc)
+    assert np.isfinite(hist[0]["global_acc"])
+
+
+def test_moment_form_matches_exact_pool_direction():
+    """Moment-form FedELMY trains and stays finite (exactness of the
+    statistics is covered in test_core)."""
+    cfg = get_arch("paper-cnn")
+    model = build_model(cfg)
+    ds = make_image_dataset(n_samples=600, seed=0, noise=2.0)
+    parts = dirichlet_partition(ds.labels, 2, 0.5, seed=0)
+    iters = [batch_iterator({"images": ds.images[p], "labels": ds.labels[p]},
+                            32, seed=i) for i, p in enumerate(parts)]
+    fed = dataclasses.replace(FED, n_clients=2, e_local=6, moment_form=True,
+                       distance_measure="squared_l2")
+    m, hist = run_fedelmy(model, iters, fed, KEY)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(m))
+
+
+def test_fedelmy_on_llm_arch():
+    """The paper's technique applied to an assigned LLM architecture
+    (reduced llama3.2-1b) — FL fine-tuning over domain-shifted token streams."""
+    cfg = get_arch("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    doms = make_lm_dataset(n_seqs=64, seq_len=32, vocab=cfg.vocab_size,
+                           n_domains=2)
+    iters = []
+    for d in doms:
+        toks = d.tokens
+        iters.append(batch_iterator(
+            {"tokens": toks[:, :-1], "labels": toks[:, 1:]}, 16, seed=0))
+    fed = FedConfig(n_clients=2, pool_size=1, e_local=3, e_warmup=2,
+                    learning_rate=1e-3)
+    m, hist = run_fedelmy(model, iters, fed, KEY)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(m))
