@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Experiment, run
 from repro.configs import FedConfig, get_arch
 from repro.data import (batch_iterator, dirichlet_partition,
                         domain_shift_partition, make_domain_datasets,
@@ -48,6 +49,14 @@ def fed_config(**kw) -> FedConfig:
                 beta=1.0)
     base.update(kw)
     return FedConfig(**base)
+
+
+def run_strategy(strategy: str, model, iters, fed: FedConfig, seed=0, **kw):
+    """One-liner over the engine: every benchmark invokes every method
+    through the same registry path."""
+    return run(Experiment(model=model, client_iters=iters, fed=fed,
+                          strategy=strategy, key=jax.random.PRNGKey(seed),
+                          **kw))
 
 
 def label_skew_setup(n_clients=4, beta=0.3, seed=0):

@@ -5,11 +5,11 @@ from __future__ import annotations
 
 import time
 
-import jax
 import numpy as np
 
-from benchmarks.common import emit_csv, fed_config, label_skew_setup, save_result
-from repro.core import pairwise_distance, run_fedelmy
+from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
+                               run_strategy, save_result)
+from repro.core import pairwise_distance
 from repro.core.pool import tree_get_member
 
 
@@ -17,8 +17,7 @@ def run():
     t0 = time.time()
     model, iters, acc = label_skew_setup(seed=0)
     fed = fed_config()
-    m, hist, pool = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0),
-                                return_final_pool=True)
+    pool = run_strategy("fedelmy", model, iters, fed).final_pool
     c = int(pool.count)
     members = [tree_get_member(pool.members, i) for i in range(c)]
     mat = np.zeros((c, c))

@@ -5,12 +5,8 @@ from __future__ import annotations
 
 import time
 
-import jax
-
 from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
-                               save_result, SCALE)
-from repro.core import run_fedelmy
-from repro.core.baselines import run_fedseq
+                               run_strategy, save_result, SCALE)
 
 
 def run():
@@ -26,13 +22,10 @@ def run():
     for method, kw in settings:
         model, iters, acc = label_skew_setup(seed=0)
         fed = fed_config(**kw)
-        if method == "fedelmy":
-            m, _ = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0))
-            steps = fed.pool_size * fed.e_local
-        else:
-            m = run_fedseq(model, iters, fed, jax.random.PRNGKey(0))
-            steps = fed.e_local
-        a = float(acc(m))
+        res = run_strategy(method, model, iters, fed)
+        steps = (fed.pool_size * fed.e_local if method == "fedelmy"
+                 else fed.e_local)
+        a = float(acc(res.params))
         rows.append({"method": method, "local_steps_per_client": steps,
                      **kw, "acc": a})
         print(f"  fig6 {method} steps/client={steps}: {a:.3f}", flush=True)

@@ -4,12 +4,8 @@ from __future__ import annotations
 
 import time
 
-import jax
-import numpy as np
-
 from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
-                               save_result)
-from repro.core import run_fedelmy
+                               run_strategy, save_result)
 
 MEASURES = ("l2", "l1", "cosine", "squared_l2")
 
@@ -23,8 +19,7 @@ def run():
             fed = fed_config(use_d1=False, use_d2=False)
         else:
             fed = fed_config(distance_measure=measure)
-        m, _ = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0))
-        a = float(acc(m))
+        a = float(acc(run_strategy("fedelmy", model, iters, fed).params))
         rows.append({"measure": measure, "acc": a})
         print(f"  fig9 {measure:10s} {a:.3f}", flush=True)
     save_result("fig9_distance_measures", rows)

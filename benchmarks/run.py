@@ -5,12 +5,35 @@ Prints ``name,us_per_call,derived`` CSV per benchmark (harness contract).
   PYTHONPATH=src python -m benchmarks.run            # full suite
   PYTHONPATH=src python -m benchmarks.run --quick    # CI-scale
   PYTHONPATH=src python -m benchmarks.run --only table1_accuracy
+  PYTHONPATH=src python -m benchmarks.run --list     # enumerate suite
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import traceback
+
+# Module names under benchmarks/; each exposes a run() entry point. --list
+# and the suite are both derived from this tuple.
+BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
+              "table4_order", "fig5_comm_cost", "fig6_compute_matched",
+              "fig9_distance_measures", "fig10_pool_heatmap", "table9_pfl",
+              "roofline_report")
+
+
+def _list() -> None:
+    """Enumerate registered benchmarks, strategies, and pool backends."""
+    from repro.api import list_pool_backends, list_strategies
+    print("benchmarks:")
+    for name in BENCHMARKS:
+        print(f"  {name}")
+    print("strategies:")
+    for name in list_strategies():
+        print(f"  {name}")
+    print("pool backends:")
+    for name in list_pool_backends():
+        print(f"  {name}")
 
 
 def main() -> None:
@@ -18,29 +41,23 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced scale (smoke)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="list registered benchmarks/strategies and exit")
     args = ap.parse_args()
+
+    if args.list:
+        _list()
+        return
 
     from benchmarks import common
     if args.quick:
         common.set_scale("quick")
 
-    from benchmarks import (fig5_comm_cost, fig6_compute_matched,
-                            fig9_distance_measures, fig10_pool_heatmap,
-                            roofline_report, table1_accuracy, table2_fewshot,
-                            table3_ablation, table4_order, table9_pfl)
-    suite = {
-        "table1_accuracy": table1_accuracy.run,
-        "table2_fewshot": table2_fewshot.run,
-        "table3_ablation": table3_ablation.run,
-        "table4_order": table4_order.run,
-        "fig5_comm_cost": fig5_comm_cost.run,
-        "fig6_compute_matched": fig6_compute_matched.run,
-        "fig9_distance_measures": fig9_distance_measures.run,
-        "fig10_pool_heatmap": fig10_pool_heatmap.run,
-        "table9_pfl": table9_pfl.run,
-        "roofline_report": roofline_report.run,
-    }
-    names = [args.only] if args.only else list(suite)
+    if args.only is not None and args.only not in BENCHMARKS:
+        ap.error(f"unknown benchmark {args.only!r}; see --list")
+    names = [args.only] if args.only else list(BENCHMARKS)
+    suite = {name: importlib.import_module(f"benchmarks.{name}").run
+             for name in names}
     print("name,us_per_call,derived")
     failed = []
     for name in names:

@@ -5,21 +5,10 @@ from __future__ import annotations
 
 import time
 
-import jax
-
 from benchmarks.common import (domain_shift_setup, emit_csv, fed_config,
-                               label_skew_setup, save_result)
-from repro.core import BASELINES, run_fedelmy
+                               label_skew_setup, run_strategy, save_result)
 
 METHODS = ("dfedavgm", "dfedsam", "metafed", "fedseq", "fedelmy")
-
-
-def _run_one(method, model, iters, acc, fed, key):
-    if method == "fedelmy":
-        m, _ = run_fedelmy(model, iters, fed, key)
-    else:
-        m = BASELINES[method](model, iters, fed, key)
-    return float(acc(m))
 
 
 def run(seeds=(0, 1)):
@@ -32,8 +21,8 @@ def run(seeds=(0, 1)):
             for seed in seeds:
                 model, iters, acc = setup(seed=seed)
                 fed = fed_config()
-                accs.append(_run_one(method, model, iters, acc, fed,
-                                     jax.random.PRNGKey(seed)))
+                res = run_strategy(method, model, iters, fed, seed=seed)
+                accs.append(float(acc(res.params)))
             import numpy as np
             rows.append({"distribution": dist, "method": method,
                          "acc_mean": float(np.mean(accs)),

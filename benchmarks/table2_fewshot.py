@@ -5,12 +5,8 @@ from __future__ import annotations
 
 import time
 
-import jax
-
 from benchmarks.common import (domain_shift_setup, emit_csv, fed_config,
-                               save_result)
-from repro.core import run_fedelmy_fewshot
-from repro.core.baselines import run_fedseq
+                               run_strategy, save_result)
 
 SHOTS = (1, 2, 3)
 
@@ -21,14 +17,13 @@ def run():
     for shots in SHOTS:
         model, iters, acc = domain_shift_setup(seed=0)
         fed = fed_config()
-        m, hist = run_fedelmy_fewshot(model, iters, fed,
-                                      jax.random.PRNGKey(0), shots=shots)
-        a_elmy = float(acc(m))
-        # FedSeq with matched number of passes
+        res = run_strategy("fedelmy_fewshot", model, iters, fed, shots=shots)
+        a_elmy = float(acc(res.params))
+        # FedSeq with matched number of passes (order cycles the ring T times)
         model, iters, acc = domain_shift_setup(seed=0)
-        m = run_fedseq(model, iters * shots, fed, jax.random.PRNGKey(0),
-                       order=list(range(len(iters))) * shots)
-        a_seq = float(acc(m))
+        res = run_strategy("fedseq", model, iters, fed,
+                           order=list(range(len(iters))) * shots)
+        a_seq = float(acc(res.params))
         rows.append({"shots": shots, "fedelmy": a_elmy, "fedseq": a_seq})
         print(f"  table2 shots={shots} fedelmy={a_elmy:.3f} "
               f"fedseq={a_seq:.3f}", flush=True)

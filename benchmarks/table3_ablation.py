@@ -6,13 +6,10 @@ from __future__ import annotations
 import dataclasses
 import time
 
-import jax
 import numpy as np
 
 from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
-                               save_result)
-from repro.core import run_fedelmy
-from repro.core.baselines import run_fedseq
+                               run_strategy, save_result)
 
 VARIANTS = [
     ("fedseq(noM)", dict(use_pool=False)),
@@ -31,12 +28,9 @@ def run(seeds=(0, 1)):
         for seed in seeds:
             model, iters, acc = label_skew_setup(seed=seed)
             fed = fed_config(**kw)
-            if not fed.use_pool:
-                m = run_fedseq(model, iters, fed, jax.random.PRNGKey(seed))
-            else:
-                m, _ = run_fedelmy(model, iters, fed,
-                                   jax.random.PRNGKey(seed))
-            accs.append(float(acc(m)))
+            strat = "fedseq" if not fed.use_pool else "fedelmy"
+            res = run_strategy(strat, model, iters, fed, seed=seed)
+            accs.append(float(acc(res.params)))
         rows.append({"variant": name, "acc_mean": float(np.mean(accs)),
                      "acc_std": float(np.std(accs))})
         print(f"  table3 {name:12s} {np.mean(accs):.3f}±{np.std(accs):.3f}",

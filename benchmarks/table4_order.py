@@ -4,13 +4,10 @@ from __future__ import annotations
 
 import time
 
-import jax
 import numpy as np
 
 from benchmarks.common import (domain_shift_setup, emit_csv, fed_config,
-                               save_result)
-from repro.core import run_fedelmy
-from repro.core.baselines import run_fedseq
+                               run_strategy, save_result)
 
 ORDERS = {
     "PACS": ("photo", "art", "cartoon", "sketch"),
@@ -26,11 +23,9 @@ def run():
     for name, order in ORDERS.items():
         model, iters, acc = domain_shift_setup(order=order, seed=0)
         fed = fed_config()
-        m, _ = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0))
-        a_elmy = float(acc(m))
+        a_elmy = float(acc(run_strategy("fedelmy", model, iters, fed).params))
         model, iters, acc = domain_shift_setup(order=order, seed=0)
-        m = run_fedseq(model, iters, fed, jax.random.PRNGKey(0))
-        a_seq = float(acc(m))
+        a_seq = float(acc(run_strategy("fedseq", model, iters, fed).params))
         rows.append({"order": name, "fedelmy": a_elmy, "fedseq": a_seq})
         print(f"  table4 {name} fedelmy={a_elmy:.3f} fedseq={a_seq:.3f}",
               flush=True)

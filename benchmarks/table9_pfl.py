@@ -5,11 +5,8 @@ from __future__ import annotations
 
 import time
 
-import jax
-
 from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
-                               save_result)
-from repro.core import BASELINES, run_fedelmy_pfl
+                               run_strategy, save_result)
 
 
 def run():
@@ -18,11 +15,7 @@ def run():
     for method in ("dfedavgm", "dfedsam", "fedelmy_pfl"):
         model, iters, acc = label_skew_setup(seed=0)
         fed = fed_config()
-        if method == "fedelmy_pfl":
-            m, _ = run_fedelmy_pfl(model, iters, fed, jax.random.PRNGKey(0))
-        else:
-            m = BASELINES[method](model, iters, fed, jax.random.PRNGKey(0))
-        a = float(acc(m))
+        a = float(acc(run_strategy(method, model, iters, fed).params))
         rows.append({"method": method, "acc": a})
         print(f"  table9 {method:12s} {a:.3f}", flush=True)
     save_result("table9_pfl", rows)

@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_arch
-from repro.core import MomentPool, ModelPool, d1_moment, pairwise_distance
+from repro.api import get_pool_backend
+from repro.configs import FedConfig, get_arch
+from repro.core import pairwise_distance
 from repro.launch.steps import param_specs_for
 from repro.models import build_model
 
@@ -28,8 +29,10 @@ def main():
     members = [model.init(k) for k in keys[:3]]
     live = model.init(keys[3])
 
-    mpool = MomentPool.create(members[0])
-    fpool = ModelPool.create(members[0], capacity=4)
+    # both representations come from the repro.api pool-backend registry
+    fed = FedConfig(pool_size=3, distance_measure="squared_l2")
+    mpool = get_pool_backend("moment").create(members[0], fed)
+    fpool = get_pool_backend("stacked").create(members[0], fed)
     for m in members[1:]:
         mpool, fpool = mpool.append(m), fpool.append(m)
 

@@ -18,8 +18,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import Experiment, run
 from repro.configs import FedConfig, get_arch
-from repro.core import run_fedelmy
 from repro.data import batch_iterator, make_lm_dataset
 from repro.models import build_model
 
@@ -61,11 +61,13 @@ def main():
                     e_warmup=max(10, args.steps // 3), learning_rate=3e-4,
                     alpha=0.06, beta=1.0)
     t0 = time.time()
-    m, hist = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0),
-                          eval_fn=neg_ppl)
-    for h in hist:
-        print(f"after client {h['client']}: held-out ppl "
-              f"{-h['global_acc']:.2f}")
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedelmy", key=jax.random.PRNGKey(0),
+                         eval_fn=neg_ppl))
+    m = res.params
+    for c in res.clients:
+        print(f"after client {c.client}: held-out ppl "
+              f"{-c.global_metric:.2f}")
     total_steps = fed.e_warmup + 4 * fed.pool_size * fed.e_local
     print(f"final held-out ppl {-float(neg_ppl(m)):.2f} "
           f"(random={cfg.vocab_size}) — {total_steps} total steps, "

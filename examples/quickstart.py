@@ -1,19 +1,21 @@
-"""Quickstart: one-shot sequential FedELMY on synthetic non-IID data.
+"""Quickstart: one-shot sequential FedELMY on synthetic non-IID data,
+through the unified `repro.api` engine (see DESIGN.md §2).
 
     PYTHONPATH=src python examples/quickstart.py
 
 Four clients hold Dirichlet(0.3)-skewed shards of a 10-class image task;
 the model chain visits each client once (one-shot SFL). Each client trains
 a pool of S=3 models under the d1/d2 diversity objective (paper Eq. 9) and
-forwards the pool average. Compare the final accuracy against FedSeq (the
-same chain without the diversity machinery).
+forwards the pool average. Every method — FedELMY and the FedSeq baseline
+alike — runs via ``api.run(Experiment(strategy=...))``; swap the strategy
+string for any name in ``api.list_strategies()``, or the pool
+representation via ``FedConfig(pool_backend=...)``.
 """
 import jax
 import jax.numpy as jnp
 
+from repro.api import Experiment, run
 from repro.configs import FedConfig, get_arch
-from repro.core import run_fedelmy
-from repro.core.baselines import run_fedseq
 from repro.data import batch_iterator, dirichlet_partition, make_image_dataset
 from repro.models import build_model
 
@@ -36,14 +38,18 @@ def main():
     fed = FedConfig(n_clients=4, pool_size=3, e_local=25, e_warmup=10,
                     learning_rate=1e-3, alpha=0.06, beta=1.0)
 
-    m_final, history = run_fedelmy(model, iters, fed, jax.random.PRNGKey(0),
-                                   eval_fn=accuracy)
-    for h in history:
-        print(f"after client {h['client']}: global acc {h['global_acc']:.3f}")
-    print(f"FedELMY final accuracy: {float(accuracy(m_final)):.3f}")
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedelmy", key=jax.random.PRNGKey(0),
+                         eval_fn=accuracy))
+    for c in res.clients:
+        print(f"after client {c.client}: global acc {c.global_metric:.3f}")
+    print(f"FedELMY final accuracy: {res.final_metric:.3f} "
+          f"({res.wall_time_s:.0f}s)")
 
-    m_seq = run_fedseq(model, iters, fed, jax.random.PRNGKey(0))
-    print(f"FedSeq  final accuracy: {float(accuracy(m_seq)):.3f}")
+    seq = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedseq", key=jax.random.PRNGKey(0),
+                         eval_fn=accuracy))
+    print(f"FedSeq  final accuracy: {seq.final_metric:.3f}")
     print("communication: both methods used exactly N-1 = 3 model transfers")
 
 

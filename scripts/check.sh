@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# One verify command for builders and CI (see DESIGN.md §Verify):
+#   tier-1 pytest + a quick benchmark smoke through the repro.api engine.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --quick --only table1_accuracy

@@ -1,0 +1,37 @@
+"""`repro.api` — the unified federated-run engine (see DESIGN.md §2).
+
+One entry point, three registries:
+
+* ``run(Experiment(...)) -> RunResult`` — executes any registered
+  strategy and returns typed records.
+* Strategy registry — ``@register_strategy`` / ``get_strategy`` /
+  ``list_strategies``; FedELMY (sequential, few-shot, PFL) and the five
+  baselines ship registered.
+* Pool-backend registry — ``register_pool_backend`` /
+  ``get_pool_backend`` / ``list_pool_backends``; "stacked" (paper pool)
+  and "moment" (running statistics) ship registered, selected via
+  ``FedConfig.pool_backend``.
+
+``LocalTrainer`` owns the optimizer and compiled local steps (the old
+``train_steps.opt`` function-attribute state is gone).
+"""
+from repro.api.engine import Callbacks, Experiment, run
+from repro.api.pools import (PoolBackend, backend_for, get_pool_backend,
+                             list_pool_backends, register_pool_backend)
+from repro.api.results import (ClientRecord, ModelRecord, RoundRecord,
+                               RunResult, StrategyOutput)
+from repro.api.strategies import (StrategySpec, get_strategy,
+                                  get_strategy_spec, list_strategies,
+                                  register_strategy)
+from repro.api.trainer import LocalTrainer, make_plain_step, regularized_loss
+
+__all__ = [
+    "run", "Experiment", "Callbacks",
+    "RunResult", "ClientRecord", "ModelRecord", "RoundRecord",
+    "StrategyOutput",
+    "register_strategy", "get_strategy", "get_strategy_spec",
+    "StrategySpec", "list_strategies",
+    "register_pool_backend", "get_pool_backend", "list_pool_backends",
+    "PoolBackend", "backend_for",
+    "LocalTrainer", "make_plain_step", "regularized_loss",
+]

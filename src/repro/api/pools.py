@@ -1,0 +1,85 @@
+"""Pool-backend registry: how a client's model pool is represented.
+
+A backend bundles construction with its d1 diversity functional, so the
+trainer never type-dispatches on pool classes (the old drivers switched
+on ``isinstance(pool, MomentPool)``). New representations — top-k pools,
+reservoir-sampled pools, sketched pools — register here and every
+strategy picks them up through ``FedConfig.pool_backend``.
+
+Built-ins:
+
+* ``"stacked"`` — paper-faithful ``ModelPool`` (S+1 full copies); supports
+  every distance measure.
+* ``"moment"``  — ``MomentPool`` running statistics (μ, q); exact for
+  squared-L2 only (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+from repro.api.registry import Registry
+from repro.configs.base import FedConfig
+from repro.core.distances import d1_moment, d1_pool_distance
+from repro.core.pool import ModelPool, MomentPool
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolBackend:
+    """A pool representation + its d1 functional.
+
+    create(m0, fed) -> pool          — seed the pool with the incoming model
+    d1(params, pool, measure) -> x   — Eq. 7 mean distance to live members
+    supported_measures               — None = all distance measures
+    """
+    name: str
+    create: Callable[[PyTree, FedConfig], Any]
+    d1: Callable[[PyTree, Any, str], jax.Array]
+    supported_measures: Optional[Tuple[str, ...]] = None
+
+
+POOL_BACKENDS = Registry("pool backend")
+
+
+def register_pool_backend(name: str, *, create, d1,
+                          supported_measures=None) -> PoolBackend:
+    backend = PoolBackend(name, create, d1,
+                          tuple(supported_measures) if supported_measures
+                          else None)
+    POOL_BACKENDS.register(name, backend)
+    return backend
+
+
+def get_pool_backend(name: str) -> PoolBackend:
+    return POOL_BACKENDS.get(name)
+
+
+def list_pool_backends():
+    return POOL_BACKENDS.names()
+
+
+def backend_for(fed: FedConfig) -> PoolBackend:
+    """Resolve + cross-validate the backend a FedConfig asks for."""
+    backend = get_pool_backend(fed.resolved_pool_backend)
+    if backend.supported_measures is not None and \
+            fed.distance_measure not in backend.supported_measures:
+        raise ValueError(
+            f"pool backend {backend.name!r} supports distance measures "
+            f"{backend.supported_measures}, got {fed.distance_measure!r}")
+    return backend
+
+
+register_pool_backend(
+    "stacked",
+    create=lambda m0, fed: ModelPool.create(m0, capacity=fed.pool_size + 1),
+    d1=d1_pool_distance)
+
+register_pool_backend(
+    "moment",
+    create=lambda m0, fed: MomentPool.create(m0),
+    d1=lambda params, pool, measure: d1_moment(params, pool),
+    supported_measures=("squared_l2",))

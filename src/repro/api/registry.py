@@ -1,0 +1,53 @@
+"""Tiny name → object registries backing the `repro.api` surface.
+
+One class serves both the strategy and the pool-backend registries; the
+only behavior beyond a dict is a helpful error that lists what *is*
+registered (misspelled strategy names are the most common user error).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+
+class Registry:
+    """Case-sensitive name → object map with decorator registration."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, Any] = {}
+
+    def register(self, name: str, obj: Optional[Any] = None):
+        """`reg.register("x", obj)` or `@reg.register("x")` decorator."""
+        if obj is not None:
+            self._register(name, obj)
+            return obj
+
+        def deco(fn):
+            self._register(name, fn)
+            return fn
+        return deco
+
+    def _register(self, name: str, obj: Any) -> None:
+        if name in self._items:
+            raise ValueError(f"{self.kind} {name!r} already registered")
+        self._items[name] = obj
+
+    def get(self, name: str) -> Any:
+        try:
+            return self._items[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{', '.join(self.names()) or '(none)'}") from None
+
+    def names(self) -> List[str]:
+        return sorted(self._items)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self.names())
+
+    def __len__(self) -> int:
+        return len(self._items)

@@ -1,0 +1,92 @@
+"""Typed run results: what `api.run` returns for every strategy.
+
+These replace the ad-hoc history dicts the old drivers accumulated.
+`RunResult.history()` reconstructs the legacy dict format so the
+deprecated `run_fedelmy*` wrappers stay drop-in compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+from repro.configs.base import FedConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class ModelRecord:
+    """One pool model trained inside a client's local procedure."""
+    index: int                       # j ∈ [0, S)
+    task_loss: float                 # last-step task loss ℓ(m_j)
+    val_metric: Optional[float] = None
+
+    def to_legacy(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"model": self.index, "task_loss": self.task_loss}
+        if self.val_metric is not None:
+            d["val_acc"] = self.val_metric
+        return d
+
+
+@dataclasses.dataclass
+class ClientRecord:
+    """One client visit in a sequential chain."""
+    client: int                      # dataset index
+    rank: int                        # position in the visit order
+    models: List[ModelRecord] = dataclasses.field(default_factory=list)
+    global_metric: Optional[float] = None   # eval_fn(m) after this client
+
+    def to_legacy(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"client": self.client, "rank": self.rank,
+                             "models": [m.to_legacy() for m in self.models]}
+        if self.global_metric is not None:
+            d["global_acc"] = self.global_metric
+        return d
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One full cycle around the ring (few-shot adaptation)."""
+    round: int
+    global_metric: Optional[float] = None
+
+    def to_legacy(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {"shot": self.round}
+        if self.global_metric is not None:
+            d["global_acc"] = self.global_metric
+        return d
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Everything a federated run produced."""
+    strategy: str
+    params: PyTree                   # final global model
+    fed: FedConfig
+    clients: List[ClientRecord] = dataclasses.field(default_factory=list)
+    rounds: List[RoundRecord] = dataclasses.field(default_factory=list)
+    final_metric: Optional[float] = None
+    wall_time_s: float = 0.0
+    final_pool: Any = None           # last client's pool, if the strategy has one
+
+    def history(self) -> List[Dict[str, Any]]:
+        """Legacy history dicts, matching the pre-`repro.api` drivers:
+        per-shot records for few-shot runs, per-client records for
+        sequential chains, and a single global record otherwise."""
+        if self.rounds:
+            return [r.to_legacy() for r in self.rounds]
+        if self.clients:
+            return [c.to_legacy() for c in self.clients]
+        if self.final_metric is not None:
+            return [{"global_acc": self.final_metric}]
+        return []
+
+
+@dataclasses.dataclass
+class StrategyOutput:
+    """What a strategy hands back to the engine (the engine adds timing
+    and the final metric to build the RunResult)."""
+    params: PyTree
+    clients: List[ClientRecord] = dataclasses.field(default_factory=list)
+    rounds: List[RoundRecord] = dataclasses.field(default_factory=list)
+    final_pool: Any = None

@@ -1,0 +1,235 @@
+"""The strategy registry: every federated algorithm as a first-class,
+uniformly-invokable strategy.
+
+A strategy is a callable ``(Experiment) -> StrategyOutput`` registered
+under a name. ``api.run`` resolves the name, times the call, evaluates
+the final model, and wraps everything in a ``RunResult`` — so adding a
+new one-shot FL method (the surveys arXiv:2502.09104 / arXiv:2505.02426
+catalogue dozens) is a single ``@register_strategy`` function.
+
+Registered here:
+
+* ``fedelmy``          — paper Alg. 1, one-shot sequential chain
+* ``fedelmy_fewshot``  — paper Alg. 2, T cycles around the ring
+* ``fedelmy_pfl``      — paper Alg. 3, decentralized PFL adaptation
+* ``fedseq``           — sequential chain, no pool/d1/d2 (SOTA baseline)
+* ``dfedavgm``         — decentralized FedAvg w/ momentum, one-shot gossip
+* ``dfedsam``          — DFedAvgM with SAM local steps
+* ``metafed``          — two cyclic passes w/ anchored personalization
+* ``local_only``       — single-client training (sanity floor)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import Registry
+from repro.api.results import ClientRecord, RoundRecord, StrategyOutput
+from repro.api.trainer import LocalTrainer, make_plain_step
+from repro.core.distances import d2_anchor_distance, log_scale
+from repro.optim import make_optimizer
+from repro.optim.sam import sam_update
+
+PyTree = Any
+
+STRATEGIES = Registry("strategy")
+
+
+class StrategySpec(NamedTuple):
+    """A registered strategy plus the optional Experiment fields it
+    honors ("init_params", "order", "shots"); the engine warns when a
+    set field is not in `supports` rather than silently ignoring it."""
+    fn: Callable
+    supports: frozenset
+
+
+def register_strategy(name: str, *, supports: tuple = ()) -> Callable:
+    """Decorator: ``@register_strategy("mymethod", supports=("order",))``
+    over an ``(Experiment) -> StrategyOutput`` callable. `supports`
+    declares which optional Experiment fields the strategy consumes."""
+    def deco(fn: Callable) -> Callable:
+        STRATEGIES.register(name, StrategySpec(fn, frozenset(supports)))
+        return fn
+    return deco
+
+
+def get_strategy(name: str) -> Callable:
+    return STRATEGIES.get(name).fn
+
+
+def get_strategy_spec(name: str) -> StrategySpec:
+    return STRATEGIES.get(name)
+
+
+def list_strategies() -> List[str]:
+    return STRATEGIES.names()
+
+
+def _tree_mean(trees):
+    return jax.tree.map(
+        lambda *xs: jnp.mean(jnp.stack([x.astype(jnp.float32) for x in xs]),
+                             axis=0).astype(xs[0].dtype), *trees)
+
+
+def _eval(exp, params):
+    return float(exp.eval_fn(params)) if exp.eval_fn is not None else None
+
+
+# ---------------------------------------------------------------------------
+# FedELMY family (paper Algorithms 1–3)
+# ---------------------------------------------------------------------------
+
+@register_strategy("fedelmy", supports=("init_params", "order"))
+def fedelmy(exp) -> StrategyOutput:
+    """Alg. 1: warm up on the first client, then chain each client's
+    pool-of-S local procedure, handing off the pool average."""
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    order = exp.resolved_order()
+    m = (exp.init_params if exp.init_params is not None
+         else exp.model.init(exp.resolved_key()))
+    m, _ = trainer.train(m, exp.client_iters[order[0]], exp.fed.e_warmup)
+
+    clients: List[ClientRecord] = []
+    pool = None
+    for rank, ci in enumerate(order):
+        m, pool, models = trainer.local_client_train(
+            m, exp.client_iters[ci],
+            on_model_end=exp.callbacks.on_model_end)
+        rec = ClientRecord(client=int(ci), rank=rank, models=models,
+                           global_metric=_eval(exp, m))
+        clients.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m)
+    return StrategyOutput(params=m, clients=clients, final_pool=pool)
+
+
+@register_strategy("fedelmy_fewshot", supports=("shots",))
+def fedelmy_fewshot(exp) -> StrategyOutput:
+    """Alg. 2: T (= exp.shots) cycles around the client ring."""
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m = exp.model.init(exp.resolved_key())
+    m, _ = trainer.train(m, exp.client_iters[0], exp.fed.e_warmup)
+
+    rounds: List[RoundRecord] = []
+    pool = None
+    for r in range(exp.shots):
+        for ci in range(len(exp.client_iters)):
+            m, pool, _ = trainer.local_client_train(m, exp.client_iters[ci])
+        rec = RoundRecord(round=r, global_metric=_eval(exp, m))
+        rounds.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m)
+    return StrategyOutput(params=m, rounds=rounds, final_pool=pool)
+
+
+@register_strategy("fedelmy_pfl")
+def fedelmy_pfl(exp) -> StrategyOutput:
+    """Alg. 3: clients train in parallel from independent inits, then a
+    one-shot average (decentralized PFL adaptation)."""
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    n = len(exp.client_iters)
+    avgs = []
+    clients: List[ClientRecord] = []
+    for ci, keyc in enumerate(jax.random.split(exp.resolved_key(), n)):
+        m0 = exp.model.init(keyc)        # independent random init per client
+        m0, _ = trainer.train(m0, exp.client_iters[ci], exp.fed.e_warmup)
+        m_avg, _, models = trainer.local_client_train(
+            m0, exp.client_iters[ci],
+            on_model_end=exp.callbacks.on_model_end)
+        avgs.append(m_avg)
+        rec = ClientRecord(client=ci, rank=ci, models=models)
+        clients.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m_avg)
+    return StrategyOutput(params=_tree_mean(avgs), clients=clients)
+
+
+# ---------------------------------------------------------------------------
+# Baselines (paper §4.1, one-shot adaptations per the appendix)
+# ---------------------------------------------------------------------------
+
+@register_strategy("fedseq", supports=("init_params", "order"))
+def fedseq(exp) -> StrategyOutput:
+    """One-shot sequential FedAvg-style chain (Li & Lyu 2024 adapted):
+    one model, E_local plain steps per client, no pool/d1/d2."""
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m = (exp.init_params if exp.init_params is not None
+         else exp.model.init(exp.resolved_key()))
+    clients: List[ClientRecord] = []
+    for rank, ci in enumerate(exp.resolved_order()):
+        m, _ = trainer.train(m, exp.client_iters[ci], exp.fed.e_local)
+        rec = ClientRecord(client=int(ci), rank=rank,
+                           global_metric=_eval(exp, m))
+        clients.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m)
+    return StrategyOutput(params=m, clients=clients)
+
+
+@register_strategy("dfedavgm")
+def dfedavgm(exp) -> StrategyOutput:
+    """Decentralized parallel FedAvg with heavy-ball momentum; one-shot
+    mesh gossip with all-select reduces to a full average."""
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed,
+                           optimizer="momentum",
+                           learning_rate=exp.fed.learning_rate * 10)
+    m0 = exp.model.init(exp.resolved_key())
+    locals_ = [trainer.train(m0, it, exp.fed.e_local)[0]
+               for it in exp.client_iters]
+    return StrategyOutput(params=_tree_mean(locals_))
+
+
+@register_strategy("dfedsam")
+def dfedsam(exp) -> StrategyOutput:
+    """DFedAvgM with SAM local steps (rho via strategy_options)."""
+    rho = exp.strategy_options.get("rho", 0.05)
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed,
+                           optimizer="sgd",
+                           learning_rate=exp.fed.learning_rate * 10)
+    loss_fn, opt = exp.model.loss_fn, trainer.opt
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def sam_step(params, opt_state, batch, s):
+        return (*sam_update(loss_fn, params, batch, opt, opt_state, s,
+                            rho=rho), 0.0)
+
+    m0 = exp.model.init(exp.resolved_key())
+    locals_ = [trainer.train(m0, it, exp.fed.e_local, step_fn=sam_step)[0]
+               for it in exp.client_iters]
+    return StrategyOutput(params=_tree_mean(locals_))
+
+
+@register_strategy("metafed")
+def metafed(exp) -> StrategyOutput:
+    """Two cyclic passes: common-knowledge accumulation, then
+    personalization with an anchor penalty toward the common model
+    (anchor_beta via strategy_options)."""
+    anchor_beta = exp.strategy_options.get("anchor_beta", 0.5)
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m = exp.model.init(exp.resolved_key())
+    for it in exp.client_iters:                   # pass 1
+        m, _ = trainer.train(m, it, exp.fed.e_local // 2)
+    common = m
+
+    def anchored_loss(params, batch):
+        task = exp.model.loss_fn(params, batch)
+        d = d2_anchor_distance(params, common, "l2")
+        return task + anchor_beta * log_scale(d, task)
+
+    anchored = make_plain_step(anchored_loss, trainer.opt)
+    for it in exp.client_iters:                   # pass 2
+        m, _ = trainer.train(m, it, exp.fed.e_local // 2, step_fn=anchored)
+    return StrategyOutput(params=m)
+
+
+@register_strategy("local_only")
+def local_only(exp) -> StrategyOutput:
+    """Single-client training (client index via strategy_options)."""
+    client = exp.strategy_options.get("client", 0)
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m, _ = trainer.train(exp.model.init(exp.resolved_key()),
+                         exp.client_iters[client], exp.fed.e_local)
+    return StrategyOutput(params=m)

@@ -1,0 +1,198 @@
+"""LocalTrainer: owns the optimizer and the compiled local-step functions.
+
+This replaces the old module-level ``train_steps`` helper, which received
+its optimizer through a mutable function attribute (``train_steps.opt``) —
+non-reentrant state that made the drivers unshardable and impossible to
+interleave. The trainer is a plain object; two trainers never share
+mutable state, and compiled steps are reused through a process-wide cache
+keyed by (loss_fn, FedConfig, optimizer spec, pool backend), so repeated
+runs over the same model recompile nothing.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.pools import PoolBackend, backend_for
+from repro.api.results import ModelRecord
+from repro.configs.base import FedConfig
+from repro.core import distances as D
+from repro.optim import make_optimizer
+from repro.optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+def regularized_loss(loss_fn: Callable, fed: FedConfig,
+                     backend: PoolBackend) -> Callable:
+    """Eq. 9: L(m) = ℓ(m; D_i) − α·d1 + β·d2, with the appendix's
+    log-calibration. d1 comes from the pool backend, so any registered
+    representation plugs in without touching this function."""
+
+    def full_loss(params, batch, pool):
+        task = loss_fn(params, batch)
+        total = task
+        if fed.use_d1:
+            d1 = backend.d1(params, pool, fed.distance_measure)
+            if fed.log_scale_distances:
+                d1 = D.log_scale(d1, task)
+            total = total - fed.alpha * d1
+        if fed.use_d2:
+            d2 = D.d2_anchor_distance(params, pool.first(),
+                                      fed.distance_measure)
+            if fed.log_scale_distances:
+                d2 = D.log_scale(d2, task)
+            total = total + fed.beta * d2
+        return total, task
+
+    return full_loss
+
+
+def make_plain_step(loss_fn: Callable, opt: Optimizer):
+    """Jitted (params, opt_state, batch, step) → (params, opt_state, task).
+    Donates params/opt_state; callers must pass fresh buffers."""
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt_state, batch, step):
+        task, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return params, opt_state, task
+
+    return step_fn
+
+
+def make_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
+                   backend: PoolBackend):
+    """Jitted regularized step; the pool rides along as a pytree argument
+    so one compilation serves every client/model."""
+    full_loss = regularized_loss(loss_fn, fed, backend)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, opt_state, batch, pool, step):
+        (_, task), grads = jax.value_and_grad(
+            lambda p: full_loss(p, batch, pool), has_aux=True)(params)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return params, opt_state, task
+
+    return step_fn
+
+
+class _CompiledSteps(NamedTuple):
+    opt: Optimizer
+    pool_step: Callable
+    plain_step: Callable
+
+
+# (loss_fn, fed, opt_name, lr, wd, backend_name) → _CompiledSteps, bounded
+# LRU. The jitted steps close over loss_fn, so a weak-keyed cache could
+# never evict (the value keeps its own key alive); a size cap bounds the
+# retained compiled executables instead.
+_STEP_CACHE: "OrderedDict[tuple, _CompiledSteps]" = OrderedDict()
+_STEP_CACHE_MAX = 8
+
+
+def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
+                    lr: float, wd: float,
+                    backend: PoolBackend) -> _CompiledSteps:
+    def build():
+        opt = make_optimizer(opt_name, lr, wd)
+        return _CompiledSteps(
+            opt=opt,
+            pool_step=make_pool_step(loss_fn, fed, opt, backend),
+            plain_step=make_plain_step(loss_fn, opt))
+
+    key = (loss_fn, fed, opt_name, lr, wd, backend.name)
+    try:
+        cached = _STEP_CACHE.get(key)
+    except TypeError:            # loss_fn not hashable: skip the cache
+        return build()
+    if cached is None:
+        cached = build()
+        _STEP_CACHE[key] = cached
+        while len(_STEP_CACHE) > _STEP_CACHE_MAX:
+            _STEP_CACHE.popitem(last=False)
+    else:
+        _STEP_CACHE.move_to_end(key)
+    return cached
+
+
+class LocalTrainer:
+    """Per-run training engine: optimizer + compiled steps + pool procedure.
+
+    `optimizer` / `learning_rate` / `weight_decay` override the FedConfig
+    values (baselines like DFedAvgM train with their own local optimizer
+    while sharing the rest of the config).
+    """
+
+    def __init__(self, loss_fn: Callable, fed: FedConfig, *,
+                 optimizer: Optional[str] = None,
+                 learning_rate: Optional[float] = None,
+                 weight_decay: Optional[float] = None):
+        self.loss_fn = loss_fn
+        self.fed = fed
+        self.backend = backend_for(fed)
+        compiled = _compiled_steps(
+            loss_fn, fed,
+            optimizer if optimizer is not None else fed.optimizer,
+            learning_rate if learning_rate is not None else fed.learning_rate,
+            weight_decay if weight_decay is not None else fed.weight_decay,
+            self.backend)
+        self.opt = compiled.opt
+        self.pool_step = compiled.pool_step
+        self.plain_step = compiled.plain_step
+
+    # -- step loop ----------------------------------------------------------
+
+    def train(self, params: PyTree, data_iter, n_steps: int, *,
+              pool: Any = None,
+              step_fn: Optional[Callable] = None) -> Tuple[PyTree, float]:
+        """Run n_steps of SGD from a fresh optimizer state. With `pool`,
+        uses the regularized step; `step_fn` overrides the step entirely
+        (signature (params, opt_state, batch, step), e.g. a SAM step)."""
+        params = jax.tree.map(jnp.copy, params)   # steps donate buffers
+        opt_state = self.opt.init(params)
+        task = jnp.zeros(())
+        for s in range(n_steps):
+            batch = next(data_iter)
+            if step_fn is not None:
+                params, opt_state, task = step_fn(params, opt_state, batch,
+                                                  jnp.int32(s))
+            elif pool is None:
+                params, opt_state, task = self.plain_step(
+                    params, opt_state, batch, jnp.int32(s))
+            else:
+                params, opt_state, task = self.pool_step(
+                    params, opt_state, batch, pool, jnp.int32(s))
+        return params, float(task)
+
+    # -- paper Alg. 1 lines 3–17 -------------------------------------------
+
+    def local_client_train(self, m_in: PyTree, data_iter, *,
+                           on_model_end: Optional[Callable] = None,
+                           ) -> Tuple[PyTree, Any, List[ModelRecord]]:
+        """One client's full local procedure: seed the pool with the
+        incoming model, train S diversity-regularized models, return
+        (pool average, pool, per-model records). With use_pool=False
+        (ablation row "no pool" == FedSeq) trains one plain model.
+        `on_model_end(record, params)` fires after each pool model; it
+        may fill `record.val_metric` with a per-model validation score."""
+        fed = self.fed
+        if not fed.use_pool:
+            params, task = self.train(m_in, data_iter, fed.e_local)
+            return params, None, []
+
+        pool = self.backend.create(m_in, fed)
+        records: List[ModelRecord] = []
+        for j in range(fed.pool_size):          # train S models
+            m_j = pool.average()                # Eq. 6 init
+            m_j, task = self.train(m_j, data_iter, fed.e_local, pool=pool)
+            pool = pool.append(m_j)
+            rec = ModelRecord(index=j, task_loss=task)
+            records.append(rec)
+            if on_model_end is not None:
+                on_model_end(rec, m_j)
+        return pool.average(), pool, records

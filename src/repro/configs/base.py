@@ -145,6 +145,13 @@ INPUT_SHAPES = {
 }
 
 
+# Valid FedConfig string knobs. Mirrored (not imported) from repro.core
+# .distances / repro.optim so configs stays dependency-free; both modules
+# raise on unknown names themselves, this just fails at construction time.
+DISTANCE_MEASURES = ("l2", "l1", "cosine", "squared_l2")
+OPTIMIZERS = ("sgd", "momentum", "adam", "adamw")
+
+
 @dataclasses.dataclass(frozen=True)
 class FedConfig:
     """FedELMY hyper-parameters (paper Alg. 1 notation)."""
@@ -162,5 +169,38 @@ class FedConfig:
     use_d2: bool = True
     use_pool: bool = True         # ablation: pool vs single model
     log_scale_distances: bool = True
-    moment_form: bool = False     # beyond-paper memory-efficient pool stats
+    moment_form: bool = False     # legacy alias for pool_backend="moment"
+    # Pool representation, resolved against the repro.api backend registry
+    # ("stacked" | "moment" | any registered extension). None derives it
+    # from the legacy `moment_form` flag.
+    pool_backend: Optional[str] = None
     seed: int = 0
+
+    def __post_init__(self):
+        if self.distance_measure not in DISTANCE_MEASURES:
+            raise ValueError(
+                f"unknown distance_measure {self.distance_measure!r}; "
+                f"expected one of {DISTANCE_MEASURES}")
+        if self.optimizer not in OPTIMIZERS:
+            raise ValueError(
+                f"unknown optimizer {self.optimizer!r}; "
+                f"expected one of {OPTIMIZERS}")
+        if self.moment_form and self.pool_backend not in (None, "moment"):
+            raise ValueError(
+                f"moment_form=True conflicts with "
+                f"pool_backend={self.pool_backend!r}; drop moment_form and "
+                f"set pool_backend explicitly")
+        if self.resolved_pool_backend == "moment" and \
+                self.distance_measure != "squared_l2":
+            raise ValueError(
+                "the moment-form pool keeps only (μ, q) statistics and "
+                "supports distance_measure='squared_l2' exactly; got "
+                f"{self.distance_measure!r}. Use pool_backend='stacked' for "
+                "l2/l1/cosine, or set distance_measure='squared_l2'.")
+
+    @property
+    def resolved_pool_backend(self) -> str:
+        """Backend name for the repro.api pool registry."""
+        if self.pool_backend is not None:
+            return self.pool_backend
+        return "moment" if self.moment_form else "stacked"

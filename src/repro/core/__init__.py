@@ -1,14 +1,17 @@
 """FedELMY — the paper's primary contribution (one-shot sequential FL with
-local model-pool diversity enhancement) as a composable JAX module."""
+local model-pool diversity enhancement) as a composable JAX module.
+
+The ``run_*`` drivers here are deprecated wrappers; the engine lives in
+``repro.api`` (strategy registry + pool backends + LocalTrainer)."""
 from repro.core.baselines import BASELINES
 from repro.core.distances import (d1_moment, d1_pool_distance,
                                   d2_anchor_distance, log_scale,
                                   pairwise_distance)
-from repro.core.fedelmy import (fedelmy_loss, local_client_train, run_fedelmy,
+from repro.core.fedelmy import (fedelmy_loss, run_fedelmy,
                                 run_fedelmy_fewshot, run_fedelmy_pfl)
 from repro.core.pool import ModelPool, MomentPool
 
 __all__ = ["BASELINES", "ModelPool", "MomentPool", "run_fedelmy",
            "run_fedelmy_fewshot", "run_fedelmy_pfl", "fedelmy_loss",
-           "local_client_train", "d1_pool_distance", "d1_moment",
+           "d1_pool_distance", "d1_moment",
            "d2_anchor_distance", "pairwise_distance", "log_scale"]

@@ -1,122 +1,66 @@
-"""FL baselines the paper compares against (§4.1), adapted to the one-shot
-setting exactly as the paper's appendix describes (all clients selected,
-one communication round).
+"""Deprecated baseline driver wrappers (paper §4.1).
 
-* FedSeq    — sequential chain, one model, E_local steps per client
-              (SOTA one-shot SFL baseline; == FedELMY without pool/d1/d2).
-* DFedAvgM  — decentralized parallel FedAvg with momentum: every client
-              trains from a shared init with heavy-ball momentum; one-shot
-              mesh gossip with all-select reduces to a full average.
-* DFedSAM   — DFedAvgM with the SAM optimizer for local steps.
-* MetaFed   — cyclic knowledge accumulation + personalization: two
-              sequential passes (2N−1 transfers), second pass anchored to
-              the incoming common model (lite adaptation of the cyclic
-              distillation idea).
-* local_only— single-client training (sanity floor).
+The baselines (FedSeq, DFedAvgM, DFedSAM, MetaFed, local_only) are now
+first-class strategies in the registry — use::
+
+    from repro.api import Experiment, run
+    m = run(Experiment(model=model, client_iters=iters, fed=fed,
+                       strategy="fedseq")).params
+
+The ``run_*`` functions below delegate to the engine and return the bare
+final params like the old hand-rolled drivers did. ``BASELINES`` keeps
+the legacy name → driver map for old call-sites.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional, Sequence
-
-import jax
-import jax.numpy as jnp
+import warnings
+from typing import Optional, Sequence
 
 from repro.configs.base import FedConfig
-from repro.core.distances import d2_anchor_distance, log_scale
-from repro.optim import make_optimizer
-from repro.optim.sam import sam_update
 
 
-def _make_plain_step(loss_fn, opt):
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, opt_state, batch, s):
-        task, grads = jax.value_and_grad(loss_fn)(params, batch)
-        return (*opt.update(params, grads, opt_state, s), task)
-    return step
-
-
-def _train(params, data_iter, n_steps, step_fn, opt):
-    # step_fn donates its params/opt_state buffers; copy so callers can
-    # reuse the incoming pytree (e.g. the shared init of parallel baselines)
-    params = jax.tree.map(jnp.copy, params)
-    opt_state = opt.init(params)
-    for s in range(n_steps):
-        params, opt_state, _ = step_fn(params, opt_state, next(data_iter),
-                                       jnp.int32(s))
-    return params
-
-
-def _tree_mean(trees):
-    return jax.tree.map(
-        lambda *xs: jnp.mean(jnp.stack([x.astype(jnp.float32) for x in xs]),
-                             axis=0).astype(xs[0].dtype), *trees)
+def _run(strategy: str, model, client_iters, fed, key, **exp_kw):
+    warnings.warn(
+        f"run_{strategy} is deprecated; use repro.api.run("
+        f"Experiment(strategy={strategy!r}, ...)) instead",
+        DeprecationWarning, stacklevel=3)
+    from repro.api import Experiment, run
+    return run(Experiment(model=model, client_iters=client_iters, fed=fed,
+                          strategy=strategy, key=key, **exp_kw)).params
 
 
 def run_fedseq(model, client_iters: Sequence, fed: FedConfig, key,
                order: Optional[Sequence[int]] = None,
                init_params=None):
-    """One-shot sequential FedAvg-style chain (Li & Lyu 2024 adapted)."""
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    step = _make_plain_step(model.loss_fn, opt)
-    order = list(order) if order is not None else list(range(len(client_iters)))
-    m = init_params if init_params is not None else model.init(key)
-    for ci in order:
-        m = _train(m, client_iters[ci], fed.e_local, step, opt)
-    return m
+    """Deprecated: one-shot sequential chain via the engine."""
+    return _run("fedseq", model, client_iters, fed, key,
+                order=order, init_params=init_params)
 
 
 def run_dfedavgm(model, client_iters: Sequence, fed: FedConfig, key):
-    opt = make_optimizer("momentum", fed.learning_rate * 10,
-                         fed.weight_decay)
-    step = _make_plain_step(model.loss_fn, opt)
-    m0 = model.init(key)
-    locals_ = [_train(m0, it, fed.e_local, step, opt) for it in client_iters]
-    return _tree_mean(locals_)
+    """Deprecated: decentralized FedAvg-with-momentum via the engine."""
+    return _run("dfedavgm", model, client_iters, fed, key)
 
 
 def run_dfedsam(model, client_iters: Sequence, fed: FedConfig, key,
                 rho: float = 0.05):
-    opt = make_optimizer("sgd", fed.learning_rate * 10, fed.weight_decay)
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, opt_state, batch, s):
-        return (*sam_update(model.loss_fn, params, batch, opt, opt_state, s,
-                            rho=rho), 0.0)
-
-    m0 = model.init(key)
-    locals_ = [_train(m0, it, fed.e_local, step, opt) for it in client_iters]
-    return _tree_mean(locals_)
+    """Deprecated: DFedAvgM + SAM local steps via the engine."""
+    return _run("dfedsam", model, client_iters, fed, key,
+                strategy_options={"rho": rho})
 
 
 def run_metafed(model, client_iters: Sequence, fed: FedConfig, key,
                 anchor_beta: float = 0.5):
-    """Two cyclic passes: common-knowledge accumulation, then
-    personalization with an anchor penalty toward the common model."""
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    plain = _make_plain_step(model.loss_fn, opt)
-    m = model.init(key)
-    for it in client_iters:                       # pass 1
-        m = _train(m, it, fed.e_local // 2, plain, opt)
-    common = m
-
-    def anchored_loss(params, batch):
-        task = model.loss_fn(params, batch)
-        d = d2_anchor_distance(params, common, "l2")
-        return task + anchor_beta * log_scale(d, task)
-
-    anchored = _make_plain_step(anchored_loss, opt)
-    for it in client_iters:                       # pass 2
-        m = _train(m, it, fed.e_local // 2, anchored, opt)
-    return m
+    """Deprecated: cyclic accumulation + anchored personalization."""
+    return _run("metafed", model, client_iters, fed, key,
+                strategy_options={"anchor_beta": anchor_beta})
 
 
 def run_local_only(model, client_iters: Sequence, fed: FedConfig, key,
                    client: int = 0):
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    step = _make_plain_step(model.loss_fn, opt)
-    return _train(model.init(key), client_iters[client], fed.e_local, step,
-                  opt)
+    """Deprecated: single-client sanity floor via the engine."""
+    return _run("local_only", model, client_iters, fed, key,
+                strategy_options={"client": client})
 
 
 BASELINES = {

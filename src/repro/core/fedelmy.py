@@ -1,24 +1,25 @@
-"""FedELMY drivers: Algorithm 1 (one-shot SFL), Algorithm 2 (few-shot) and
-Algorithm 3 (decentralized PFL adaptation).
+"""FedELMY: the Eq. 9 regularized objective + legacy driver wrappers.
 
-The per-model local training step is a single jitted function shared by all
-drivers; the FL chain itself is Python orchestration above pjit — mirroring
-how the client chain sits above SGD in the paper (and how the pod-to-pod
-handoff sits above the per-pod train_step on the production mesh).
+The drivers (Algorithm 1 one-shot SFL, Algorithm 2 few-shot, Algorithm 3
+decentralized PFL) now live in the strategy registry — use::
+
+    from repro.api import Experiment, run
+    result = run(Experiment(model=model, client_iters=iters, fed=fed,
+                            strategy="fedelmy"))
+
+The ``run_fedelmy*`` functions below are thin deprecated wrappers that
+delegate to the engine and return the legacy ``(params, history)`` tuples.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.core import distances as D
-from repro.core.pool import ModelPool, MomentPool
-from repro.optim import make_optimizer
+from repro.core.pool import MomentPool
 
 PyTree = Any
 
@@ -29,7 +30,11 @@ PyTree = Any
 
 def fedelmy_loss(loss_fn: Callable, params: PyTree, batch, pool,
                  fed: FedConfig):
-    """L(m) = ℓ(m; D_i) − α·d1 + β·d2, with appendix log-calibration."""
+    """L(m) = ℓ(m; D_i) − α·d1 + β·d2, with appendix log-calibration.
+
+    Reference form with isinstance pool dispatch; the engine's trainer
+    builds the same objective from the pool-backend registry
+    (repro.api.trainer.regularized_loss) so new backends plug in."""
     task = loss_fn(params, batch)
     total = task
     moment = isinstance(pool, MomentPool)
@@ -40,173 +45,61 @@ def fedelmy_loss(loss_fn: Callable, params: PyTree, batch, pool,
             d1 = D.log_scale(d1, task)
         total = total - fed.alpha * d1
     if fed.use_d2:
-        d2 = D.d2_anchor_distance(params, pool.first(),
-                                  "squared_l2" if moment and
-                                  fed.distance_measure == "squared_l2"
-                                  else fed.distance_measure)
+        d2 = D.d2_anchor_distance(params, pool.first(), fed.distance_measure)
         if fed.log_scale_distances:
             d2 = D.log_scale(d2, task)
         total = total + fed.beta * d2
     return total, task
 
 
-def make_local_train_step(loss_fn: Callable, fed: FedConfig, opt):
-    """Returns jitted (params, opt_state, batch, pool, step) -> ... Pool is
-    a pytree argument, so one compilation serves every client/model."""
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def step_fn(params, opt_state, batch, pool, step):
-        def full_loss(p):
-            total, task = fedelmy_loss(loss_fn, p, batch, pool, fed)
-            return total, task
-        (total, task), grads = jax.value_and_grad(full_loss, has_aux=True)(
-            params)
-        params, opt_state = opt.update(params, grads, opt_state, step)
-        return params, opt_state, task
-
-    @functools.partial(jax.jit, donate_argnums=(0, 1))
-    def plain_step_fn(params, opt_state, batch, step):
-        task, grads = jax.value_and_grad(loss_fn)(params, batch)
-        params, opt_state = opt.update(params, grads, opt_state, step)
-        return params, opt_state, task
-
-    return step_fn, plain_step_fn
-
-
-def train_steps(params, data_iter, n_steps, step_fn, pool=None):
-    """Run n_steps of (regularized) SGD; returns params and last task loss."""
-    opt = train_steps.opt
-    params = jax.tree.map(jnp.copy, params)   # step_fn donates its buffers
-    opt_state = opt.init(params)
-    task = jnp.zeros(())
-    for s in range(n_steps):
-        batch = next(data_iter)
-        if pool is None:
-            params, opt_state, task = step_fn(params, opt_state, batch,
-                                              jnp.int32(s))
-        else:
-            params, opt_state, task = step_fn(params, opt_state, batch, pool,
-                                              jnp.int32(s))
-    return params, float(task)
-
-
 # ---------------------------------------------------------------------------
-# Local client procedure (Alg. 1 lines 3–17)
+# Deprecated driver wrappers (delegate to repro.api)
 # ---------------------------------------------------------------------------
 
-def local_client_train(m_in: PyTree, loss_fn: Callable, data_iter,
-                       fed: FedConfig, step_fn, plain_step_fn,
-                       eval_fn: Optional[Callable] = None,
-                       log: Optional[list] = None) -> Tuple[PyTree, Any]:
-    """One client's full local procedure. Returns (m_avg, pool)."""
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    train_steps.opt = opt
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use repro.api.run({new}) instead",
+        DeprecationWarning, stacklevel=3)
 
-    if not fed.use_pool:                 # ablation row "no pool" == FedSeq
-        params, _ = train_steps(m_in, data_iter, fed.e_local, plain_step_fn)
-        return params, None
-
-    if fed.moment_form:
-        pool = MomentPool.create(m_in)
-    else:
-        pool = ModelPool.create(m_in, capacity=fed.pool_size + 1)
-
-    for j in range(fed.pool_size):       # train S models
-        m_j = pool.average()             # Eq. 6 init
-        m_j, task = train_steps(m_j, data_iter, fed.e_local, step_fn, pool)
-        pool = pool.append(m_j)
-        if log is not None:
-            entry = {"model": j, "task_loss": task}
-            if eval_fn is not None:
-                entry["val_acc"] = float(eval_fn(m_j))
-            log.append(entry)
-    return pool.average(), pool
-
-
-# ---------------------------------------------------------------------------
-# Algorithm 1: one-shot sequential FedELMY
-# ---------------------------------------------------------------------------
 
 def run_fedelmy(model, client_iters: Sequence, fed: FedConfig,
                 key: jax.Array, eval_fn: Optional[Callable] = None,
                 order: Optional[Sequence[int]] = None,
                 init_params: Optional[PyTree] = None,
                 return_final_pool: bool = False):
-    """client_iters: per-client infinite batch iterators.
-    Returns (m_final, history)."""
-    n = len(client_iters)
-    order = list(order) if order is not None else list(range(n))
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    step_fn, plain_step_fn = make_local_train_step(model.loss_fn, fed, opt)
-    train_steps.opt = opt
-
-    # line 1: warm up a randomly initialized model on client 1
-    m = init_params if init_params is not None else model.init(key)
-    m, _ = train_steps(m, client_iters[order[0]], fed.e_warmup, plain_step_fn)
-
-    history: List[dict] = []
-    pool = None
-    for rank, ci in enumerate(order):
-        log: List[dict] = []
-        m, pool = local_client_train(
-            m, model.loss_fn, client_iters[ci], fed, step_fn, plain_step_fn,
-            eval_fn=None, log=log)
-        rec = {"client": int(ci), "rank": rank, "models": log}
-        if eval_fn is not None:
-            rec["global_acc"] = float(eval_fn(m))
-        history.append(rec)
+    """Deprecated: Algorithm 1 via the engine. Returns (m_final, history)
+    [+ final pool]."""
+    _deprecated("run_fedelmy", "Experiment(strategy='fedelmy', ...)")
+    from repro.api import Experiment, run
+    res = run(Experiment(model=model, client_iters=client_iters, fed=fed,
+                         strategy="fedelmy", key=key, eval_fn=eval_fn,
+                         order=order, init_params=init_params))
     if return_final_pool:
-        return m, history, pool
-    return m, history
+        return res.params, res.history(), res.final_pool
+    return res.params, res.history()
 
-
-# ---------------------------------------------------------------------------
-# Algorithm 2: few-shot adaptation (T cycles around the ring)
-# ---------------------------------------------------------------------------
 
 def run_fedelmy_fewshot(model, client_iters: Sequence, fed: FedConfig,
                         key: jax.Array, shots: int,
                         eval_fn: Optional[Callable] = None):
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    step_fn, plain_step_fn = make_local_train_step(model.loss_fn, fed, opt)
-    train_steps.opt = opt
+    """Deprecated: Algorithm 2 via the engine."""
+    _deprecated("run_fedelmy_fewshot",
+                "Experiment(strategy='fedelmy_fewshot', shots=T, ...)")
+    from repro.api import Experiment, run
+    res = run(Experiment(model=model, client_iters=client_iters, fed=fed,
+                         strategy="fedelmy_fewshot", key=key,
+                         eval_fn=eval_fn, shots=shots))
+    return res.params, res.history()
 
-    m = model.init(key)
-    m, _ = train_steps(m, client_iters[0], fed.e_warmup, plain_step_fn)
-    history = []
-    for r in range(shots):
-        for ci in range(len(client_iters)):
-            m, _ = local_client_train(m, model.loss_fn, client_iters[ci],
-                                      fed, step_fn, plain_step_fn)
-        rec = {"shot": r}
-        if eval_fn is not None:
-            rec["global_acc"] = float(eval_fn(m))
-        history.append(rec)
-    return m, history
-
-
-# ---------------------------------------------------------------------------
-# Algorithm 3: decentralized PFL adaptation (clients in parallel, then avg)
-# ---------------------------------------------------------------------------
 
 def run_fedelmy_pfl(model, client_iters: Sequence, fed: FedConfig,
                     key: jax.Array, eval_fn: Optional[Callable] = None):
-    opt = make_optimizer(fed.optimizer, fed.learning_rate, fed.weight_decay)
-    step_fn, plain_step_fn = make_local_train_step(model.loss_fn, fed, opt)
-    train_steps.opt = opt
-
-    n = len(client_iters)
-    avgs = []
-    for ci, keyc in enumerate(jax.random.split(key, n)):
-        m0 = model.init(keyc)            # independent random init per client
-        m0, _ = train_steps(m0, client_iters[ci], fed.e_warmup, plain_step_fn)
-        m_avg, _ = local_client_train(m0, model.loss_fn, client_iters[ci],
-                                      fed, step_fn, plain_step_fn)
-        avgs.append(m_avg)
-    m_final = jax.tree.map(
-        lambda *xs: jnp.mean(jnp.stack([x.astype(jnp.float32) for x in xs]),
-                             axis=0).astype(xs[0].dtype), *avgs)
-    history = []
-    if eval_fn is not None:
-        history.append({"global_acc": float(eval_fn(m_final))})
-    return m_final, history
+    """Deprecated: Algorithm 3 via the engine."""
+    _deprecated("run_fedelmy_pfl",
+                "Experiment(strategy='fedelmy_pfl', ...)")
+    from repro.api import Experiment, run
+    res = run(Experiment(model=model, client_iters=client_iters, fed=fed,
+                         strategy="fedelmy_pfl", key=key, eval_fn=eval_fn))
+    history = ([{"global_acc": res.final_metric}]
+               if res.final_metric is not None else [])
+    return res.params, history

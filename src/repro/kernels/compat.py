@@ -1,0 +1,11 @@
+"""Pallas API compatibility: `CompilerParams` was `TPUCompilerParams`
+before jax 0.5; resolve whichever this jax ships."""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is not supported by "
+        "repro.kernels (extend repro/kernels/compat.py with its name).")

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 BLOCK_P = 65536          # 256 KiB f32 per member-row tile
 
 
@@ -68,7 +70,7 @@ def pool_distance_stats(w_flat, pool_flat, *, block_p=BLOCK_P,
         ],
         out_specs=[pl.BlockSpec((c, 1), lambda i: (0, 0))] * 4,
         out_shape=[jax.ShapeDtypeStruct((c, 1), jnp.float32)] * 4,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(w_flat[None, :], pool_flat)

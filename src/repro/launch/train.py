@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import Experiment, list_strategies, run
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import FedConfig, get_arch
-from repro.core import BASELINES, run_fedelmy, run_fedelmy_fewshot
 from repro.data import (batch_iterator, dirichlet_partition,
                         make_domain_datasets, make_image_dataset,
                         make_lm_dataset)
@@ -81,7 +81,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paper-cnn")
     ap.add_argument("--method", default="fedelmy",
-                    choices=["fedelmy"] + sorted(BASELINES))
+                    choices=list_strategies())
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--pool", type=int, default=3)
     ap.add_argument("--e-local", type=int, default=20)
@@ -113,23 +113,23 @@ def main():
     fed = FedConfig(n_clients=args.clients, pool_size=args.pool,
                     e_local=args.e_local, e_warmup=args.e_warmup,
                     alpha=args.alpha, beta=args.beta,
-                    learning_rate=args.lr, moment_form=args.moment_form,
+                    learning_rate=args.lr,
+                    pool_backend="moment" if args.moment_form else "stacked",
                     distance_measure=("squared_l2" if args.moment_form
                                       else "l2"),
                     seed=args.seed)
 
     t0 = time.time()
-    key = jax.random.PRNGKey(args.seed)
-    if args.method == "fedelmy":
-        if args.shots > 1:
-            m, hist = run_fedelmy_fewshot(model, iters, fed, key,
-                                          shots=args.shots, eval_fn=eval_fn)
-        else:
-            m, hist = run_fedelmy(model, iters, fed, key, eval_fn=eval_fn)
-    else:
-        m = BASELINES[args.method](model, iters, fed, key)
-        hist = []
-    score = float(eval_fn(m))
+    method = args.method
+    if method == "fedelmy" and args.shots > 1:
+        method = "fedelmy_fewshot"
+    track_eval = eval_fn if method.startswith("fedelmy") else None
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy=method, key=jax.random.PRNGKey(args.seed),
+                         eval_fn=track_eval, shots=args.shots))
+    m, hist = res.params, res.history()
+    score = (res.final_metric if res.final_metric is not None
+             else float(eval_fn(m)))
     wall = time.time() - t0
 
     if args.handoff_dir:          # exercise the serialized transfer format

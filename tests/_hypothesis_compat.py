@@ -1,0 +1,83 @@
+"""Lightweight fallback for `hypothesis` when it isn't installed.
+
+Property tests degrade to a deterministic example sweep: each strategy
+contributes its bounds plus a fixed pseudo-random sample, and the test
+body runs once per example combination (zip, not product, to stay fast).
+Real hypothesis, when available, is strictly better — test modules
+import it first and fall back here:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import inspect
+import random
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, sample: Callable[[random.Random], Any],
+                 bounds: List[Any]):
+        self._sample = sample
+        self._bounds = bounds
+
+    def examples(self, rng: random.Random, n: int) -> List[Any]:
+        out = list(self._bounds)
+        while len(out) < n:
+            out.append(self._sample(rng))
+        return out[:n]
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         [min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         [min_value, max_value])
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements), list(elements))
+
+
+st = _Strategies()
+strategies = st
+
+
+def settings(max_examples: int = 10, **_: Any) -> Callable:
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**named: _Strategy) -> Callable:
+    def deco(fn):
+        n = getattr(fn, "_compat_max_examples", 10)
+
+        def wrapper(**fixtures):
+            rng = random.Random(0)
+            columns = {name: s.examples(rng, n) for name, s in named.items()}
+            for i in range(n):
+                example = {name: col[i] for name, col in columns.items()}
+                fn(**fixtures, **example)
+
+        # Expose only the non-example parameters (pytest fixtures) in the
+        # signature; copying fn's full signature would make pytest treat
+        # the example parameters as fixtures too.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in named])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

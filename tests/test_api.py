@@ -1,0 +1,313 @@
+"""Tests for the `repro.api` engine: registry round-trips, pool-backend
+equivalence, FedConfig validation, and legacy-wrapper equivalence."""
+import dataclasses
+import itertools
+import warnings
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # clean env: deterministic example sweep
+    from _hypothesis_compat import given, settings, st
+
+from repro.api import (Experiment, RunResult, get_pool_backend, get_strategy,
+                       list_pool_backends, list_strategies, run)
+from repro.configs import FedConfig
+from repro.core import ModelPool, MomentPool, pairwise_distance
+from repro.core.distances import d1_pool_distance
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Tiny linear-model harness (fast enough to smoke every strategy)
+# ---------------------------------------------------------------------------
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _tiny_model():
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (4, 3)),
+                "b": jnp.zeros((3,))}
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(batch["y"], 3)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    def forward(params, batch):
+        return batch["x"] @ params["w"] + params["b"]
+
+    return TinyModel(init, loss_fn, forward)
+
+
+def _client_iter(seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 4))
+    y = jnp.arange(8) % 3
+    return itertools.cycle([{"x": x, "y": y}])
+
+
+FED = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                learning_rate=1e-2)
+
+
+def _params(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"w": scale * jax.random.normal(k1, (17, 5)),
+            "b": scale * jax.random.normal(k2, (23,))}
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trips
+# ---------------------------------------------------------------------------
+
+def test_all_paper_strategies_registered():
+    expected = {"fedelmy", "fedelmy_fewshot", "fedelmy_pfl", "fedseq",
+                "dfedavgm", "dfedsam", "metafed", "local_only"}
+    assert expected <= set(list_strategies())
+
+
+def test_strategy_resolution_roundtrip():
+    for name in list_strategies():
+        assert callable(get_strategy(name))
+
+
+def test_unknown_strategy_lists_registered():
+    with pytest.raises(ValueError, match="fedelmy"):
+        get_strategy("fedavg_typo")
+    model = _tiny_model()
+    with pytest.raises(ValueError, match="unknown strategy"):
+        run(Experiment(model=model, client_iters=[_client_iter(0)],
+                       fed=FED, strategy="nope"))
+
+
+def test_pool_backend_roundtrip():
+    assert {"stacked", "moment"} <= set(list_pool_backends())
+    for name in list_pool_backends():
+        assert get_pool_backend(name).name == name
+    with pytest.raises(ValueError, match="stacked"):
+        get_pool_backend("topk_typo")
+
+
+def test_every_registered_strategy_runs_2client_smoke():
+    """Registry round-trip: every strategy resolves, runs a 2-client
+    smoke, and returns a well-formed RunResult."""
+    model = _tiny_model()
+    iters = [_client_iter(0), _client_iter(1)]
+    hold = next(_client_iter(9))
+
+    def metric(params):
+        return -model.loss_fn(params, hold)
+
+    for name in list_strategies():
+        res = run(Experiment(model=model, client_iters=iters, fed=FED,
+                             strategy=name, key=KEY, eval_fn=metric))
+        assert isinstance(res, RunResult), name
+        assert res.strategy == name
+        assert np.isfinite(res.final_metric), name
+        assert res.wall_time_s >= 0
+        assert isinstance(res.history(), list)
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree.leaves(res.params)), name
+
+
+def test_unsupported_experiment_field_warns():
+    """Strategies declare the optional fields they honor; setting one a
+    strategy ignores warns instead of silently producing a wrong run."""
+    model = _tiny_model()
+    iters = [_client_iter(0), _client_iter(1)]
+    init = model.init(KEY)
+    with pytest.warns(UserWarning, match="ignores Experiment.init_params"):
+        run(Experiment(model=model, client_iters=iters, fed=FED,
+                       strategy="dfedavgm", key=KEY, init_params=init))
+    with pytest.warns(UserWarning, match="ignores Experiment.shots"):
+        run(Experiment(model=model, client_iters=iters, fed=FED,
+                       strategy="fedseq", key=KEY, shots=3))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # supported fields stay silent
+        run(Experiment(model=model, client_iters=iters, fed=FED,
+                       strategy="fedseq", key=KEY, init_params=init,
+                       order=[1, 0]))
+
+
+# ---------------------------------------------------------------------------
+# Pool-backend equivalence: moment statistics == stacked squared-L2 d1
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 5), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_moment_backend_matches_stacked_squared_l2(n, seed):
+    """Property: MomentPool.mean_sq_distance equals the ModelPool stacked
+    squared-L2 d1 path to tolerance, member-for-member."""
+    fed = FedConfig(pool_size=n + 1, distance_measure="squared_l2")
+    ps = [_params(jax.random.fold_in(KEY, 100 + seed * 10 + i))
+          for i in range(n)]
+    stacked = get_pool_backend("stacked")
+    moment = get_pool_backend("moment")
+    fpool = stacked.create(ps[0], fed)
+    mpool = moment.create(ps[0], fed)
+    for p in ps[1:]:
+        fpool, mpool = fpool.append(p), mpool.append(p)
+    live = _params(jax.random.fold_in(KEY, 999 + seed))
+    via_moment = float(mpool.mean_sq_distance(live))
+    via_stack = float(stacked.d1(live, fpool, "squared_l2"))
+    np.testing.assert_allclose(via_moment, via_stack, rtol=1e-4)
+    # the registered moment d1 is the RMS of the same statistic
+    np.testing.assert_allclose(float(moment.d1(live, mpool, "squared_l2")),
+                               np.sqrt(via_stack + 1e-12), rtol=1e-4)
+
+
+def test_moment_backend_d1_is_exact_rms():
+    ps = [_params(jax.random.fold_in(KEY, i)) for i in range(3)]
+    mpool = MomentPool.create(ps[0]).append(ps[1]).append(ps[2])
+    live = _params(jax.random.fold_in(KEY, 7))
+    got = float(mpool.mean_sq_distance(live))
+    brute = np.mean([float(pairwise_distance(live, p, "squared_l2"))
+                     for p in ps])
+    np.testing.assert_allclose(got, brute, rtol=1e-4)
+
+
+def test_stacked_backend_is_model_pool():
+    fed = FedConfig(pool_size=2)
+    pool = get_pool_backend("stacked").create(_params(KEY), fed)
+    assert isinstance(pool, ModelPool)
+    assert pool.capacity == fed.pool_size + 1
+    d1 = get_pool_backend("stacked").d1(_params(jax.random.fold_in(KEY, 1)),
+                                        pool, "l2")
+    np.testing.assert_allclose(
+        float(d1), float(d1_pool_distance(
+            _params(jax.random.fold_in(KEY, 1)), pool, "l2")), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FedConfig construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_fedconfig_moment_form_requires_squared_l2():
+    with pytest.raises(ValueError, match="squared_l2"):
+        FedConfig(moment_form=True)                    # default l2
+    with pytest.raises(ValueError, match="squared_l2"):
+        FedConfig(pool_backend="moment", distance_measure="cosine")
+    FedConfig(moment_form=True, distance_measure="squared_l2")   # ok
+    FedConfig(pool_backend="moment", distance_measure="squared_l2")
+
+
+def test_fedconfig_unknown_strings_rejected():
+    with pytest.raises(ValueError, match="distance_measure"):
+        FedConfig(distance_measure="manhattan")
+    with pytest.raises(ValueError, match="optimizer"):
+        FedConfig(optimizer="adamax")
+
+
+def test_fedconfig_moment_form_conflict():
+    with pytest.raises(ValueError, match="conflicts"):
+        FedConfig(moment_form=True, pool_backend="stacked")
+
+
+def test_fedconfig_resolved_backend():
+    assert FedConfig().resolved_pool_backend == "stacked"
+    assert FedConfig(moment_form=True,
+                     distance_measure="squared_l2"
+                     ).resolved_pool_backend == "moment"
+    assert FedConfig(pool_backend="moment",
+                     distance_measure="squared_l2"
+                     ).resolved_pool_backend == "moment"
+
+
+def test_unregistered_pool_backend_fails_at_run():
+    model = _tiny_model()
+    fed = dataclasses.replace(FED, pool_backend="reservoir")
+    with pytest.raises(ValueError, match="pool backend"):
+        run(Experiment(model=model, client_iters=[_client_iter(0)],
+                       fed=fed, strategy="fedelmy", key=KEY))
+
+
+# ---------------------------------------------------------------------------
+# Legacy wrappers: DeprecationWarning + equivalence on a fixed seed
+# ---------------------------------------------------------------------------
+
+def test_legacy_wrappers_warn_and_match_engine():
+    from repro.core import run_fedelmy
+    from repro.core.baselines import run_fedseq
+    model = _tiny_model()
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        m_old, hist_old = run_fedelmy(model, [_client_iter(0),
+                                              _client_iter(1)], FED, KEY)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+
+    res = run(Experiment(model=model,
+                         client_iters=[_client_iter(0), _client_iter(1)],
+                         fed=FED, strategy="fedelmy", key=KEY))
+    for a, b in zip(jax.tree.leaves(m_old), jax.tree.leaves(res.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hist_old == res.history()
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        m_seq = run_fedseq(model, [_client_iter(0), _client_iter(1)], FED,
+                           KEY)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    seq = run(Experiment(model=model,
+                         client_iters=[_client_iter(0), _client_iter(1)],
+                         fed=FED, strategy="fedseq", key=KEY))
+    for a, b in zip(jax.tree.leaves(m_seq), jax.tree.leaves(seq.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_legacy_baselines_dict_still_resolves():
+    from repro.core import BASELINES
+    assert set(BASELINES) == {"fedseq", "dfedavgm", "dfedsam", "metafed",
+                              "local_only"}
+    model = _tiny_model()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        m = BASELINES["local_only"](model, [_client_iter(0)], FED, KEY)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(m))
+
+
+# ---------------------------------------------------------------------------
+# Engine conveniences
+# ---------------------------------------------------------------------------
+
+def test_run_accepts_kwargs():
+    model = _tiny_model()
+    res = run(model=model, client_iters=[_client_iter(0), _client_iter(1)],
+              fed=FED, strategy="fedseq", key=KEY)
+    assert res.strategy == "fedseq"
+
+
+def test_default_key_comes_from_fed_seed():
+    model = _tiny_model()
+    fed = dataclasses.replace(FED, seed=3)
+    iters = lambda: [_client_iter(0), _client_iter(1)]   # noqa: E731
+    res_a = run(Experiment(model=model, client_iters=iters(), fed=fed,
+                           strategy="fedseq"))
+    res_b = run(Experiment(model=model, client_iters=iters(), fed=fed,
+                           strategy="fedseq", key=jax.random.PRNGKey(3)))
+    for a, b in zip(jax.tree.leaves(res_a.params),
+                    jax.tree.leaves(res_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_no_mutable_function_attribute_state():
+    """The old drivers wired the optimizer through `train_steps.opt`; the
+    engine must not grow that pattern back anywhere in src/."""
+    import pathlib
+    import re
+    src = pathlib.Path(__file__).resolve().parent.parent / "src"
+    offenders = []
+    for path in src.rglob("*.py"):
+        text = path.read_text()
+        if re.search(r"\btrain_steps\.opt\s*=", text):
+            offenders.append(str(path))
+    assert not offenders, f"train_steps.opt state resurfaced in {offenders}"

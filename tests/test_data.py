@@ -2,7 +2,10 @@
 setups; hypothesis drives the invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # clean env: deterministic example sweep
+    from _hypothesis_compat import given, settings, st
 
 from repro.data import (batch_iterator, dirichlet_partition,
                         domain_shift_partition, make_domain_datasets,

@@ -1,7 +1,8 @@
 """Integration tests: the full FedELMY system end-to-end on synthetic
-non-IID data (CNN = the paper's setup; and the LLM path on a reduced arch).
-These validate the paper's *claims structure* at smoke scale — the full
-claims run lives in benchmarks/ (EXPERIMENTS.md §Paper-claims)."""
+non-IID data (CNN = the paper's setup; and the LLM path on a reduced arch),
+driven through the unified `repro.api` engine. These validate the paper's
+*claims structure* at smoke scale — the full claims run lives in
+benchmarks/ (EXPERIMENTS.md §Paper-claims)."""
 import dataclasses
 
 import jax
@@ -9,9 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import Experiment, run
 from repro.configs import FedConfig, get_arch
-from repro.core import (BASELINES, run_fedelmy, run_fedelmy_fewshot,
-                        run_fedelmy_pfl)
 from repro.data import (batch_iterator, dirichlet_partition,
                         make_image_dataset, make_lm_dataset)
 from repro.models import build_model
@@ -41,70 +41,101 @@ FED = FedConfig(n_clients=3, pool_size=2, e_local=12, e_warmup=6,
                 learning_rate=1e-3)
 
 
-def test_fedelmy_beats_random_and_produces_history(cnn_setup):
+def test_fedelmy_beats_random_and_produces_records(cnn_setup):
     model, iters, acc = cnn_setup
-    m, hist = run_fedelmy(model, iters, FED, KEY, eval_fn=acc)
-    a = float(acc(m))
-    assert a > 0.3, f"accuracy {a} barely above random"
-    assert len(hist) == 3
-    assert all(len(h["models"]) == FED.pool_size for h in hist)
-    leaves = jax.tree.leaves(m)
+    res = run(Experiment(model=model, client_iters=iters, fed=FED,
+                         strategy="fedelmy", key=KEY, eval_fn=acc))
+    assert res.final_metric > 0.3, \
+        f"accuracy {res.final_metric} barely above random"
+    assert res.strategy == "fedelmy"
+    assert len(res.clients) == 3
+    assert all(len(c.models) == FED.pool_size for c in res.clients)
+    assert all(np.isfinite(m.task_loss)
+               for c in res.clients for m in c.models)
+    leaves = jax.tree.leaves(res.params)
     assert all(bool(jnp.isfinite(x).all()) for x in leaves)
 
 
 def test_fedelmy_one_shot_communication_count(cnn_setup):
     """One-shot SFL: the chain makes exactly N-1 handoffs (paper Fig. 5) —
-    verified structurally: history has N entries, each consuming the
-    previous client's average."""
+    verified structurally: one ClientRecord per client, in visit order."""
     model, iters, acc = cnn_setup
-    _, hist = run_fedelmy(model, iters, FED, KEY)
-    assert [h["client"] for h in hist] == [0, 1, 2]
+    res = run(Experiment(model=model, client_iters=iters, fed=FED,
+                         strategy="fedelmy", key=KEY))
+    assert [c.client for c in res.clients] == [0, 1, 2]
+    assert [c.rank for c in res.clients] == [0, 1, 2]
 
 
 def test_client_order_permutation(cnn_setup):
     model, iters, acc = cnn_setup
-    m, hist = run_fedelmy(model, iters, FED, KEY, order=[2, 0, 1])
-    assert [h["client"] for h in hist] == [2, 0, 1]
-    assert float(acc(m)) > 0.25
+    res = run(Experiment(model=model, client_iters=iters, fed=FED,
+                         strategy="fedelmy", key=KEY, order=[2, 0, 1],
+                         eval_fn=acc))
+    assert [c.client for c in res.clients] == [2, 0, 1]
+    assert res.final_metric > 0.25
 
 
 def test_fewshot_improves_or_holds(cnn_setup):
     model, iters, acc = cnn_setup
     fed = dataclasses.replace(FED, e_local=8, pool_size=1)
-    _, hist = run_fedelmy_fewshot(model, iters, fed, KEY, shots=2,
-                                  eval_fn=acc)
-    assert len(hist) == 2
-    assert hist[-1]["global_acc"] >= hist[0]["global_acc"] - 0.1
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedelmy_fewshot", key=KEY, shots=2,
+                         eval_fn=acc))
+    assert len(res.rounds) == 2
+    assert res.rounds[-1].global_metric >= \
+        res.rounds[0].global_metric - 0.1
 
 
 def test_baselines_run(cnn_setup):
     model, iters, acc = cnn_setup
     fed = dataclasses.replace(FED, e_local=6)
     for name in ("fedseq", "dfedavgm", "metafed", "local_only"):
-        m = BASELINES[name](model, iters, fed, KEY)
-        assert np.isfinite(float(acc(m)))
+        res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                             strategy=name, key=KEY, eval_fn=acc))
+        assert np.isfinite(res.final_metric), name
 
 
 def test_pfl_adaptation_runs(cnn_setup):
     model, iters, acc = cnn_setup
     fed = dataclasses.replace(FED, e_local=5, pool_size=1, e_warmup=3)
-    m, hist = run_fedelmy_pfl(model, iters, fed, KEY, eval_fn=acc)
-    assert np.isfinite(hist[0]["global_acc"])
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedelmy_pfl", key=KEY, eval_fn=acc))
+    assert np.isfinite(res.final_metric)
+    assert len(res.clients) == 3      # one record per parallel client
 
 
-def test_moment_form_matches_exact_pool_direction():
+def test_callbacks_fire_per_model_and_client(cnn_setup):
+    from repro.api import Callbacks
+    model, iters, acc = cnn_setup
+    fed = dataclasses.replace(FED, e_local=4)
+    seen = {"models": 0, "clients": 0}
+    cb = Callbacks(
+        on_model_end=lambda rec, params: seen.__setitem__(
+            "models", seen["models"] + 1),
+        on_client_end=lambda rec, params: seen.__setitem__(
+            "clients", seen["clients"] + 1))
+    run(Experiment(model=model, client_iters=iters, fed=fed,
+                   strategy="fedelmy", key=KEY, callbacks=cb))
+    assert seen["clients"] == 3
+    assert seen["models"] == 3 * fed.pool_size
+
+
+def test_moment_backend_trains_finite():
     """Moment-form FedELMY trains and stays finite (exactness of the
-    statistics is covered in test_core)."""
+    statistics is covered in test_core / test_api)."""
     cfg = get_arch("paper-cnn")
     model = build_model(cfg)
     ds = make_image_dataset(n_samples=600, seed=0, noise=2.0)
     parts = dirichlet_partition(ds.labels, 2, 0.5, seed=0)
     iters = [batch_iterator({"images": ds.images[p], "labels": ds.labels[p]},
                             32, seed=i) for i, p in enumerate(parts)]
-    fed = dataclasses.replace(FED, n_clients=2, e_local=6, moment_form=True,
-                       distance_measure="squared_l2")
-    m, hist = run_fedelmy(model, iters, fed, KEY)
-    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(m))
+    fed = dataclasses.replace(FED, n_clients=2, e_local=6,
+                              pool_backend="moment",
+                              distance_measure="squared_l2")
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedelmy", key=KEY))
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(res.params))
 
 
 def test_fedelmy_on_llm_arch():
@@ -121,5 +152,7 @@ def test_fedelmy_on_llm_arch():
             {"tokens": toks[:, :-1], "labels": toks[:, 1:]}, 16, seed=0))
     fed = FedConfig(n_clients=2, pool_size=1, e_local=3, e_warmup=2,
                     learning_rate=1e-3)
-    m, hist = run_fedelmy(model, iters, fed, KEY)
-    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(m))
+    res = run(Experiment(model=model, client_iters=iters, fed=fed,
+                         strategy="fedelmy", key=KEY))
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(res.params))

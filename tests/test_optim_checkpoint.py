@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # clean env: deterministic example sweep
+    from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import load_pytree, save_pytree
 from repro.optim import make_optimizer
