@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Experiment, run
+from repro.api import BatchAxes, Experiment, run, run_batch
 from repro.configs import FedConfig, get_arch
 from repro.data import (batch_iterator, dirichlet_partition,
                         domain_shift_partition, make_domain_datasets,
@@ -59,6 +59,30 @@ def run_strategy(strategy: str, model, iters, fed: FedConfig, seed=0, **kw):
                           **kw))
 
 
+def run_strategy_batch(strategy: str, model, fed: FedConfig, *,
+                       seeds=None, fed_grid=None, iters_for_seed=None,
+                       eval_for_seed=None, iters_for_run=None, iters=None,
+                       **kw):
+    """Sweep entry point over `api.run_batch`: compatible runs execute as
+    one vmapped program (see DESIGN.md §6). The factories regenerate
+    per-seed / per-run data and eval — stateful iterators must not be
+    shared across runs of a batch."""
+    if iters is not None:
+        first = iters
+    elif iters_for_run is not None:
+        first = iters_for_run(0)
+    else:
+        first = iters_for_seed(seeds[0] if seeds else 0)
+    base = Experiment(model=model, client_iters=first, fed=fed,
+                      strategy=strategy, **kw)
+    return run_batch(base, axes=BatchAxes(
+        seeds=list(seeds) if seeds is not None else None,
+        fed_grid=fed_grid,
+        client_iters_for_seed=iters_for_seed,
+        eval_fn_for_seed=eval_for_seed,
+        client_iters_for_run=iters_for_run))
+
+
 def label_skew_setup(n_clients=4, beta=0.3, seed=0):
     """CIFAR-10 stand-in with Dirichlet(beta) label skew."""
     cfg = get_arch("paper-cnn")
@@ -92,6 +116,58 @@ def domain_shift_setup(n_clients=4, seed=0, order=("photo", "art", "cartoon",
     return model, iters, _acc_fn(model, test)
 
 
+def probe_mlp_setup(n_clients=4, beta=0.3, seed=0, width=64, batch=16):
+    """Dispatch-bound sweep probe: a small dense classifier over 4×4-pooled
+    synthetic images on the same Dirichlet label-skew partition. FedELMY's
+    pool mechanics (Eq. 5–9 act in parameter space) are model-agnostic, so
+    (α, β)-surface sweeps map the regularizer response on this probe in
+    seconds — the regime `api.run_batch` amortizes (per-step compute ≈
+    dispatch cost, per-point compile walls dominate a sequential sweep).
+    Paper-scale accuracy claims stay on the full CNN (table1/fig9)."""
+    from repro.models.layers import _he
+    from repro.models.transformer import Model
+    cfg = get_arch("paper-cnn")
+
+    def pool_feats(imgs):
+        x = imgs.astype(jnp.float32)
+        x = x.reshape(x.shape[0], 8, 4, 8, 4, 3).mean(axis=(2, 4))
+        return x.reshape(x.shape[0], -1)               # (B, 192)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"fc1": {"w": _he(k1, (192, width), jnp.float32),
+                        "b": jnp.zeros((width,))},
+                "fc2": {"w": _he(k2, (width, 10), jnp.float32),
+                        "b": jnp.zeros((10,))}}
+
+    def forward(params, batch):
+        x = pool_feats(batch["images"])
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["labels"][:, None],
+                                   axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    model = Model(cfg, init, forward, loss_fn, None, None, None)
+    ds = make_image_dataset(SCALE["n"], seed=seed, noise=NOISE)
+    test = make_image_dataset(SCALE["n_test"], seed=seed + 91, noise=NOISE)
+    parts = dirichlet_partition(ds.labels, n_clients, beta, seed=seed)
+
+    def iters_for_run(i):
+        # same seeds for every run: fresh iterator objects per call, but an
+        # identical batch stream, so grid runs differ ONLY in (α, β)
+        return [batch_iterator(
+                    {"images": ds.images[p], "labels": ds.labels[p]},
+                    batch, seed=seed * 100 + j)
+                for j, p in enumerate(parts)]
+
+    return model, iters_for_run, _acc_fn(model, test)
+
+
 def _acc_fn(model, test):
     imgs = jnp.asarray(test.images)
     labels = jnp.asarray(test.labels)
@@ -118,7 +194,14 @@ def save_result(name: str, rows):
         json.dump(rows, f, indent=1, default=float)
 
 
+# name → {"us_per_call": float, "derived": str}; emit_csv records every
+# benchmark here so benchmarks.run --json can dump machine-readable timings
+# (scripts/bench_compare.py diffs them against BENCH_baseline.json in CI).
+TIMINGS = {}
+
+
 def emit_csv(name: str, t0: float, derived: str):
     """`name,us_per_call,derived` line per the harness contract."""
     us = (time.time() - t0) * 1e6
+    TIMINGS[name] = {"us_per_call": us, "derived": derived}
     print(f"{name},{us:.0f},{derived}", flush=True)

@@ -1,38 +1,88 @@
-"""Paper Fig. 10: pairwise L2 distances within the final client's model pool
-— the diversity witness. Claim: pairwise distances vary substantially with
-no monotone trend (the pool is genuinely diverse, not a degenerate line)."""
+"""Paper Fig. 10: the (α, β) pool-hyperparameter grid + the pool-diversity
+witness. Claims: (1) accuracy is stable across a broad (α, β) region;
+(2) the final pool's pairwise L2 distances vary substantially with no
+monotone trend (genuinely diverse, not a degenerate line).
+
+The 3×3 grid runs on the dispatch-bound MLP probe (see
+`common.probe_mlp_setup`: the pool regularizers act in parameter space, so
+the (α, β) response surface is model-agnostic) through `api.run_batch` as
+ONE vmapped program — (α, β) are traced per-run scalars, so the whole
+sweep compiles once, while the naive sequential sweep recompiles per grid
+point (each (α, β) bakes new constants) and pays a per-step dispatch wall
+per run. The derived column reports that batched-vs-sequential wall-clock
+ratio; the acceptance gate is ratio > 1 on CPU (measured ~2-3× on a
+2-core host, bit-identical results both ways — tests/test_batch.py)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
-                               run_strategy, save_result)
+from benchmarks.common import (emit_csv, fed_config, probe_mlp_setup,
+                               run_strategy, run_strategy_batch, save_result)
 from repro.core import pairwise_distance
 from repro.core.pool import tree_get_member
+
+ALPHAS = (0.02, 0.06, 0.18)
+BETAS = (0.25, 1.0, 4.0)
 
 
 def run():
     t0 = time.time()
-    model, iters, acc = label_skew_setup(seed=0)
+    model, iters_for_run, acc = probe_mlp_setup(seed=0)
+    alphas, betas = ALPHAS, BETAS
+    grid = [{"alpha": a, "beta": b} for a in alphas for b in betas]
+
     fed = fed_config()
-    pool = run_strategy("fedelmy", model, iters, fed).final_pool
+    bt0 = time.time()
+    batch = run_strategy_batch("fedelmy", model, fed, fed_grid=grid,
+                               iters_for_run=iters_for_run)
+    batch_s = time.time() - bt0
+    accs = np.array([float(acc(res.params)) for res in batch]
+                    ).reshape(len(alphas), len(betas))
+
+    # Naive sequential sweep: every (α, β) is a new FedConfig, so every
+    # grid point pays its own dispatch/compile wall — the cost run_batch
+    # amortizes into one program.
+    st0 = time.time()
+    for i, g in enumerate(grid):
+        run_strategy("fedelmy", model, iters_for_run(i), fed_config(**g))
+    seq_s = time.time() - st0
+    speedup = seq_s / max(batch_s, 1e-9)
+
+    # Diversity witness from the (α₀, β₀)-nearest-to-paper run's final pool
+    center = grid.index({"alpha": 0.06, "beta": 1.0}) \
+        if {"alpha": 0.06, "beta": 1.0} in grid else 0
+    pool = batch[center].final_pool
     c = int(pool.count)
     members = [tree_get_member(pool.members, i) for i in range(c)]
     mat = np.zeros((c, c))
     for i in range(c):
         for j in range(c):
-            mat[i, j] = float(pairwise_distance(members[i], members[j], "l2"))
+            mat[i, j] = float(pairwise_distance(members[i], members[j],
+                                                "l2"))
     off = mat[np.triu_indices(c, 1)]
-    rows = {"heatmap": mat.tolist(), "pool_size": c,
-            "offdiag_mean": float(off.mean()), "offdiag_std": float(off.std()),
-            "offdiag_cv": float(off.std() / off.mean())}
-    print(f"  fig10 pool={c} pairwise L2 mean={off.mean():.3f} "
-          f"cv={rows['offdiag_cv']:.3f}", flush=True)
+
+    bi, bj = np.unravel_index(np.argmax(accs), accs.shape)
+    rows = {"alphas": list(alphas), "betas": list(betas),
+            "acc_grid": accs.tolist(),
+            "best_alpha": float(alphas[bi]), "best_beta": float(betas[bj]),
+            "heatmap": mat.tolist(), "pool_size": c,
+            "offdiag_mean": float(off.mean()),
+            "offdiag_std": float(off.std()),
+            "offdiag_cv": float(off.std() / off.mean()),
+            "batch_wall_s": batch_s, "sequential_wall_s": seq_s,
+            "batch_speedup": float(speedup),
+            "n_compiled_groups": batch.n_compiled_groups}
+    print(f"  fig10 {len(grid)}-pt grid best=(α={alphas[bi]}, β={betas[bj]})"
+          f" acc={accs[bi, bj]:.3f} pool_cv={rows['offdiag_cv']:.3f}"
+          f" speedup={speedup:.2f}x", flush=True)
     save_result("fig10_pool_heatmap", rows)
     emit_csv("fig10_pool_heatmap", t0,
-             f"pairwise_cv={rows['offdiag_cv']:.3f};diverse={off.std() > 0}")
+             f"batch_speedup={speedup:.2f};"
+             f"best_alpha={alphas[bi]};best_beta={betas[bj]};"
+             f"pairwise_cv={rows['offdiag_cv']:.3f};"
+             f"diverse={off.std() > 0}")
     return rows
 
 

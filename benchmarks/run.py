@@ -6,11 +6,15 @@ Prints ``name,us_per_call,derived`` CSV per benchmark (harness contract).
   PYTHONPATH=src python -m benchmarks.run --quick    # CI-scale
   PYTHONPATH=src python -m benchmarks.run --only table1_accuracy
   PYTHONPATH=src python -m benchmarks.run --list     # enumerate suite
+  PYTHONPATH=src python -m benchmarks.run --quick --json out.json
+      # + per-benchmark us_per_call as JSON (the perf-regression guard:
+      # scripts/bench_compare.py diffs it against BENCH_baseline.json)
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import sys
 import traceback
 
@@ -43,6 +47,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--list", action="store_true",
                     help="list registered benchmarks/strategies and exit")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write per-benchmark us_per_call as JSON")
     args = ap.parse_args()
 
     if args.list:
@@ -67,6 +73,10 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
             print(f"{name},0,FAILED")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"scale": "quick" if args.quick else "full",
+                       "benchmarks": common.TIMINGS}, f, indent=1)
     if failed:
         sys.exit(1)
 

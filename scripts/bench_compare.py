@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Perf-regression guard: diff a benchmarks.run --json report against the
+committed baseline (BENCH_baseline.json). Warn-only — CI hosts vary too
+much for a hard gate; the signal is the printed delta table plus a nonzero
+warning count in the job log.
+
+  python scripts/bench_compare.py BENCH_baseline.json bench_smoke.json
+  python scripts/bench_compare.py --threshold 2.0 baseline.json new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_THRESHOLD = 1.5      # warn when us_per_call grows past baseline×1.5
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return data.get("benchmarks", data)
+
+
+def compare(baseline: dict, new: dict, threshold: float) -> int:
+    warnings = 0
+    print(f"{'benchmark':30s} {'baseline_us':>14s} {'new_us':>14s} "
+          f"{'ratio':>7s}")
+    for name in sorted(set(baseline) | set(new)):
+        b = baseline.get(name, {}).get("us_per_call")
+        n = new.get(name, {}).get("us_per_call")
+        if b is None or n is None:
+            status = "baseline-only" if n is None else "new (no baseline)"
+            print(f"{name:30s} {b or '—':>14} {n or '—':>14}   {status}")
+            continue
+        ratio = n / b if b else float("inf")
+        flag = ""
+        if ratio > threshold:
+            flag = f"  WARN >{threshold:g}x baseline"
+            warnings += 1
+        print(f"{name:30s} {b:14.0f} {n:14.0f} {ratio:7.2f}{flag}")
+    return warnings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    args = ap.parse_args()
+    try:
+        baseline, new = load(args.baseline), load(args.new)
+    except FileNotFoundError as e:
+        print(f"bench_compare: {e} — nothing to compare", file=sys.stderr)
+        return                       # warn-only: missing files never fail CI
+    warnings = compare(baseline, new, args.threshold)
+    if warnings:
+        print(f"\nbench_compare: {warnings} benchmark(s) slower than "
+              f"{args.threshold:g}x baseline (warn-only)")
+    else:
+        print("\nbench_compare: all benchmarks within threshold")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,31 @@
 #!/usr/bin/env bash
 # One verify command for builders and CI (see DESIGN.md §Verify):
 #   tier-1 pytest + a quick benchmark smoke through the repro.api engine.
+#
+#   scripts/check.sh          # full suite + table1 smoke (local default)
+#   scripts/check.sh --fast   # CI tier-1 leg: pytest -m "not slow" plus the
+#                             # fig10 run_batch smoke (dispatch-bound probe,
+#                             # ~1 min) instead of the ~9 min table1 sweep
+#
+# The benchmark smoke writes bench_smoke.csv (harness CSV) and
+# bench_smoke.json (per-benchmark us_per_call, diffable against
+# BENCH_baseline.json via scripts/bench_compare.py) in the repo root; CI
+# uploads both as artifacts.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
-python -m benchmarks.run --quick --only table1_accuracy
+PYTEST_ARGS=(-x -q)
+SMOKE=table1_accuracy
+for arg in "$@"; do
+  case "$arg" in
+    --fast) PYTEST_ARGS+=(-m "not slow"); SMOKE=fig10_pool_heatmap ;;
+    *) echo "unknown flag: $arg (expected --fast)" >&2; exit 2 ;;
+  esac
+done
+
+python -m pytest "${PYTEST_ARGS[@]}"
+# tee the full log to the console, keep only the `name,us,derived` contract
+# lines in the .csv (benchmarks also print progress rows on stdout)
+python -m benchmarks.run --quick --only "$SMOKE" --json bench_smoke.json \
+    | tee /dev/stderr | grep -E '^(name,|[a-z0-9_]+,[0-9])' > bench_smoke.csv

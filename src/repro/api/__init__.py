@@ -1,9 +1,13 @@
-"""`repro.api` — the unified federated-run engine (see DESIGN.md §2).
+"""`repro.api` — the unified federated-run engine (see DESIGN.md §2, §6).
 
-One entry point, three registries:
+Two entry points, three registries:
 
 * ``run(Experiment(...)) -> RunResult`` — executes any registered
   strategy and returns typed records.
+* ``run_batch(Experiment, axes=BatchAxes(...)) -> BatchResult`` —
+  executes a sweep (seeds, (α, β) grids, strategy options), batching
+  compatible runs into single vmapped programs; per-run results are
+  bit-identical to sequential ``run``.
 * Strategy registry — ``@register_strategy`` / ``get_strategy`` /
   ``list_strategies``; FedELMY (sequential, few-shot, PFL) and the five
   baselines ship registered.
@@ -15,20 +19,23 @@ One entry point, three registries:
 ``LocalTrainer`` owns the optimizer and compiled local steps (the old
 ``train_steps.opt`` function-attribute state is gone).
 """
+from repro.api.batch import BatchAxes, run_batch
 from repro.api.engine import Callbacks, Experiment, run
 from repro.api.pools import (PoolBackend, backend_for, get_pool_backend,
                              list_pool_backends, register_pool_backend)
-from repro.api.results import (ClientRecord, ModelRecord, RoundRecord,
-                               RunResult, StrategyOutput)
+from repro.api.results import (BatchResult, ClientRecord, ModelRecord,
+                               RoundRecord, RunResult, StrategyOutput)
 from repro.api.strategies import (StrategySpec, get_strategy,
                                   get_strategy_spec, list_strategies,
                                   register_strategy)
-from repro.api.trainer import LocalTrainer, make_plain_step, regularized_loss
+from repro.api.trainer import (LocalTrainer, make_plain_step,
+                               regularized_loss, stack_trees, unstack_tree)
 
 __all__ = [
     "run", "Experiment", "Callbacks",
+    "run_batch", "BatchAxes", "BatchResult",
     "RunResult", "ClientRecord", "ModelRecord", "RoundRecord",
-    "StrategyOutput",
+    "StrategyOutput", "stack_trees", "unstack_tree",
     "register_strategy", "get_strategy", "get_strategy_spec",
     "StrategySpec", "list_strategies",
     "register_pool_backend", "get_pool_backend", "list_pool_backends",

@@ -1,0 +1,349 @@
+"""Batched experiment execution: `run_batch` — N experiments, one program.
+
+The paper's claims are sweeps (Table 1 averages seeds, Fig. 9 sweeps
+distance measures, Fig. 10 sweeps the (α, β) grid), and `api.run` pays one
+dispatch/compile wall per Python call. `run_batch` stacks the *experiment*
+axis instead: experiments that share a compiled step graph are grouped and
+executed through the vmapped step variants in `api.trainer`, so a 4-seed
+sweep or a 9-point (α, β) grid is one jitted program.
+
+    from repro.api import BatchAxes, Experiment, run_batch
+
+    batch = run_batch(Experiment(model=m, client_iters=make_iters(0), fed=fed),
+                      axes=BatchAxes(seeds=range(4),
+                                     client_iters_for_seed=make_iters))
+    batch[0].params        # per-run RunResult, bit-identical to api.run
+
+Every run must own its iterator objects (stateful streams cannot be
+shared across runs of a batch — the engine rejects sharing); the
+BatchAxes factories exist for exactly that.
+
+Grouping rules (see DESIGN.md §6):
+
+* Two experiments batch together iff they share the strategy, the client
+  count / visit-order length, the strategy options, and every FedConfig
+  field except ``alpha``/``beta`` — those two are threaded through the
+  compiled program as traced per-run scalars (the Fig. 10 grid).
+* Strategies with a batched executor: ``fedelmy``, ``fedseq`` (sequential
+  chains, batched over runs) and ``dfedavgm`` / ``dfedsam`` (additionally
+  client-parallel: the run and client axes flatten into one vmap axis).
+* Everything else — singleton groups, strategies without an executor,
+  experiments with callbacks attached — falls back to sequential `api.run`
+  per experiment. The result order always matches the input order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.engine import (Experiment, finalize_result, run,
+                              warn_unsupported_fields)
+from repro.api.results import BatchResult, ClientRecord, RunResult, \
+    StrategyOutput
+from repro.api.strategies import _tree_mean
+from repro.api.trainer import LocalTrainer, stack_trees, unstack_tree
+from repro.optim.sam import sam_update
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class BatchAxes:
+    """The sweep axes `run_batch` expands a base Experiment over (cartesian
+    product of whichever axes are set).
+
+    seeds                 — per-run PRNG seed (→ ``Experiment.key``)
+    fed_grid              — per-run FedConfig overrides, e.g.
+                            ``[{"alpha": a, "beta": b} for a in A for b in B]``
+                            (only alpha/beta keep runs in one compiled group)
+    strategy_options_grid — per-run strategy_options overrides
+    client_iters_for_seed — optional factory: seed → fresh client iterators
+                            (seed sweeps where the *data* varies per seed)
+    eval_fn_for_seed      — optional factory: seed → eval_fn
+    client_iters_for_run  — optional factory: flat run index → fresh client
+                            iterators; takes precedence over the seed
+                            factory. Stateful iterators must NOT be shared
+                            across runs of a batch — each run consumes its
+                            own stream (one factory call per run keeps the
+                            per-run batch sequence identical to a
+                            sequential `api.run`).
+    """
+    seeds: Optional[Sequence[int]] = None
+    fed_grid: Optional[Sequence[Dict[str, Any]]] = None
+    strategy_options_grid: Optional[Sequence[Dict[str, Any]]] = None
+    client_iters_for_seed: Optional[Callable[[int], Sequence[Any]]] = None
+    eval_fn_for_seed: Optional[Callable[[int], Callable]] = None
+    client_iters_for_run: Optional[Callable[[int], Sequence[Any]]] = None
+
+    def expand(self, base: Experiment) -> List[Experiment]:
+        seeds = list(self.seeds) if self.seeds is not None else [None]
+        feds = list(self.fed_grid) if self.fed_grid is not None else [None]
+        opts = (list(self.strategy_options_grid)
+                if self.strategy_options_grid is not None else [None])
+        exps = []
+        for seed in seeds:
+            for fo in feds:
+                for so in opts:
+                    repl: Dict[str, Any] = {}
+                    if seed is not None:
+                        repl["key"] = jax.random.PRNGKey(seed)
+                        if self.client_iters_for_seed is not None:
+                            repl["client_iters"] = \
+                                self.client_iters_for_seed(seed)
+                        if self.eval_fn_for_seed is not None:
+                            repl["eval_fn"] = self.eval_fn_for_seed(seed)
+                    if fo:
+                        repl["fed"] = dataclasses.replace(base.fed, **fo)
+                    if so:
+                        repl["strategy_options"] = {**base.strategy_options,
+                                                    **so}
+                    if self.client_iters_for_run is not None:
+                        repl["client_iters"] = \
+                            self.client_iters_for_run(len(exps))
+                    exps.append(dataclasses.replace(base, **repl))
+        return exps
+
+
+# ---------------------------------------------------------------------------
+# Grouping
+# ---------------------------------------------------------------------------
+
+def _static_fed(fed):
+    """FedConfig with the per-run-traceable fields normalized away: alpha
+    and beta ride through the batched step as traced scalars, seed only
+    feeds the default key (resolved per run before grouping)."""
+    return dataclasses.replace(fed, alpha=0.0, beta=0.0, seed=0)
+
+
+def _group_key(e: Experiment) -> tuple:
+    # id(loss_fn): a batched group trains every run through ONE compiled
+    # loss — two models whose params merely happen to share shapes must
+    # never alias (ids are stable here: the experiment list keeps every
+    # model alive for the duration of the call).
+    return (e.strategy, _static_fed(e.fed), id(e.model.loss_fn),
+            len(e.client_iters), len(e.resolved_order()),
+            tuple(sorted((k, repr(v))
+                         for k, v in e.strategy_options.items())))
+
+
+def _check_no_shared_iterators(exps: List[Experiment]) -> None:
+    """Stateful iterators shared across runs of a batched group would get
+    round-robin-drained (run 0 sees batches 0, B, 2B, …), silently breaking
+    the bit-identity contract — reject instead. Sharing *within* one run is
+    fine: the batched loop consumes clients in the same order as
+    sequential `run`."""
+    owner: Dict[int, int] = {}
+    for i, e in enumerate(exps):
+        for it in e.client_iters:
+            first = owner.setdefault(id(it), i)
+            if first != i:
+                raise ValueError(
+                    "experiments in a batched group share client iterator "
+                    f"objects (runs {first} and {i}); stateful streams "
+                    "cannot be shared across runs — build fresh iterators "
+                    "per run (BatchAxes.client_iters_for_seed / "
+                    "client_iters_for_run, or per-run lists in "
+                    "experiments=)")
+
+
+def _batchable(e: Experiment) -> bool:
+    return (e.strategy in _BATCHED_EXECUTORS
+            and e.callbacks.on_model_end is None
+            and e.callbacks.on_client_end is None)
+
+
+# ---------------------------------------------------------------------------
+# Batched executors: List[Experiment] -> List[StrategyOutput]
+# ---------------------------------------------------------------------------
+
+def _eval_slice(e: Experiment, stacked: PyTree, i: int) -> Optional[float]:
+    return (float(e.eval_fn(unstack_tree(stacked, i)))
+            if e.eval_fn is not None else None)
+
+
+def _stacked_inits(exps: List[Experiment], mesh) -> PyTree:
+    inits = [e.init_params if e.init_params is not None
+             else e.model.init(e.resolved_key()) for e in exps]
+    m = stack_trees(inits)
+    if mesh is not None:
+        from repro.sharding.specs import shard_run_batch
+        m = shard_run_batch(m, mesh)
+    return m
+
+
+def _alphas_betas(exps: List[Experiment]) -> Tuple[jax.Array, jax.Array]:
+    return (jnp.asarray([e.fed.alpha for e in exps], jnp.float32),
+            jnp.asarray([e.fed.beta for e in exps], jnp.float32))
+
+
+def _exec_fedelmy(exps: List[Experiment], mesh) -> List[StrategyOutput]:
+    """Alg. 1 over B runs in lockstep: the chain/warmup/pool loop structure
+    is static across the group (same FedConfig modulo α/β), only the data,
+    the keys and (α, β) vary per run."""
+    fed = exps[0].fed
+    trainer = LocalTrainer(exps[0].model.loss_fn, fed)
+    orders = [e.resolved_order() for e in exps]
+    alphas, betas = _alphas_betas(exps)
+    m = _stacked_inits(exps, mesh)
+    warm_iters = [e.client_iters[o[0]] for e, o in zip(exps, orders)]
+    m, _ = trainer.train_batched(m, warm_iters, fed.e_warmup)
+
+    clients: List[List[ClientRecord]] = [[] for _ in exps]
+    pools = None
+    for rank in range(len(orders[0])):
+        its = [e.client_iters[o[rank]] for e, o in zip(exps, orders)]
+        m, pools, recs = trainer.local_client_train_batched(
+            m, its, alphas, betas)
+        for i, e in enumerate(exps):
+            clients[i].append(ClientRecord(
+                client=int(orders[i][rank]), rank=rank, models=recs[i],
+                global_metric=_eval_slice(e, m, i)))
+    return [StrategyOutput(
+                params=unstack_tree(m, i), clients=clients[i],
+                final_pool=None if pools is None else unstack_tree(pools, i))
+            for i in range(len(exps))]
+
+
+def _exec_fedseq(exps: List[Experiment], mesh) -> List[StrategyOutput]:
+    fed = exps[0].fed
+    trainer = LocalTrainer(exps[0].model.loss_fn, fed)
+    orders = [e.resolved_order() for e in exps]
+    m = _stacked_inits(exps, mesh)
+    clients: List[List[ClientRecord]] = [[] for _ in exps]
+    for rank in range(len(orders[0])):
+        its = [e.client_iters[o[rank]] for e, o in zip(exps, orders)]
+        m, _ = trainer.train_batched(m, its, fed.e_local)
+        for i, e in enumerate(exps):
+            clients[i].append(ClientRecord(
+                client=int(orders[i][rank]), rank=rank,
+                global_metric=_eval_slice(e, m, i)))
+    return [StrategyOutput(params=unstack_tree(m, i), clients=clients[i])
+            for i in range(len(exps))]
+
+
+def _exec_client_parallel(exps: List[Experiment], mesh, *,
+                          make_trainer: Callable,
+                          make_step: Optional[Callable] = None,
+                          ) -> List[StrategyOutput]:
+    """DFedAvgM/DFedSAM: clients within a run are independent, so the run
+    and client axes flatten into one (B·N,) vmap axis — within-round
+    client-parallel training on top of the cross-run batching."""
+    fed = exps[0].fed
+    n = len(exps[0].client_iters)
+    trainer = make_trainer(exps[0].model.loss_fn, fed)
+    m0s = [e.model.init(e.resolved_key()) for e in exps]
+    flat = stack_trees([m0 for m0 in m0s for _ in range(n)])
+    if mesh is not None:
+        from repro.sharding.specs import shard_run_batch
+        flat = shard_run_batch(flat, mesh)
+    flat_iters = [it for e in exps for it in e.client_iters]
+    step_fn = make_step(trainer) if make_step is not None else None
+    flat, _ = trainer.train_batched(flat, flat_iters, fed.e_local,
+                                    step_fn=step_fn)
+    outs = []
+    for i in range(len(exps)):
+        locals_ = [unstack_tree(flat, i * n + k) for k in range(n)]
+        outs.append(StrategyOutput(params=_tree_mean(locals_)))
+    return outs
+
+
+def _exec_dfedavgm(exps: List[Experiment], mesh) -> List[StrategyOutput]:
+    return _exec_client_parallel(
+        exps, mesh,
+        make_trainer=lambda loss_fn, fed: LocalTrainer(
+            loss_fn, fed, optimizer="momentum",
+            learning_rate=fed.learning_rate * 10))
+
+
+def _exec_dfedsam(exps: List[Experiment], mesh) -> List[StrategyOutput]:
+    rho = exps[0].strategy_options.get("rho", 0.05)
+    loss_fn = exps[0].model.loss_fn
+
+    def make_step(trainer):
+        def one(params, opt_state, batch, s):
+            return (*sam_update(loss_fn, params, batch, trainer.opt,
+                                opt_state, s, rho=rho), 0.0)
+        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)),
+                       donate_argnums=(0, 1))
+
+    return _exec_client_parallel(
+        exps, mesh,
+        make_trainer=lambda lf, fed: LocalTrainer(
+            lf, fed, optimizer="sgd", learning_rate=fed.learning_rate * 10),
+        make_step=make_step)
+
+
+_BATCHED_EXECUTORS: Dict[str, Callable] = {
+    "fedelmy": _exec_fedelmy,
+    "fedseq": _exec_fedseq,
+    "dfedavgm": _exec_dfedavgm,
+    "dfedsam": _exec_dfedsam,
+}
+
+
+# ---------------------------------------------------------------------------
+# run_batch
+# ---------------------------------------------------------------------------
+
+def run_batch(experiment: Optional[Experiment] = None,
+              axes: Optional[BatchAxes] = None, *,
+              experiments: Optional[Sequence[Experiment]] = None,
+              mesh=None) -> BatchResult:
+    """Execute a sweep of experiments, batching compatible runs into single
+    jitted programs. Either pass a base `experiment` plus `axes` (expanded
+    via `BatchAxes.expand`), or an explicit `experiments` list (runs that
+    need per-run data/eval beyond what BatchAxes factories express).
+
+    `mesh`: optional `jax.sharding.Mesh` — stacked run axes are sharded
+    over its data axis (see `repro.sharding.specs.run_batch_specs`).
+
+    Per-run results are bit-identical to sequential `api.run` on the same
+    Experiment (tested in tests/test_batch.py): the batched steps are the
+    sequential step graphs under `vmap`, consuming each run's iterators in
+    the same order.
+    """
+    if experiments is not None:
+        exps = list(experiments)
+    else:
+        if experiment is None:
+            raise ValueError("run_batch needs an Experiment (plus BatchAxes)"
+                             " or an explicit experiments= list")
+        exps = axes.expand(experiment) if axes is not None else [experiment]
+    if not exps:
+        return BatchResult(runs=[], wall_time_s=0.0, n_compiled_groups=0)
+
+    # Partition into batchable groups, preserving input order inside each.
+    groups: Dict[Any, List[int]] = {}
+    sequential: List[int] = []
+    for i, e in enumerate(exps):
+        if _batchable(e):
+            groups.setdefault(_group_key(e), []).append(i)
+        else:
+            sequential.append(i)
+
+    t0 = time.time()
+    results: List[Optional[RunResult]] = [None] * len(exps)
+    n_groups = 0
+    for key, idxs in groups.items():
+        if len(idxs) == 1:        # singleton: the plain path is cheaper
+            sequential.extend(idxs)
+            continue
+        sub = [exps[i] for i in idxs]
+        for e in sub:          # fallback runs warn inside run() instead
+            warn_unsupported_fields(e)
+        _check_no_shared_iterators(sub)
+        g0 = time.time()
+        outs = _BATCHED_EXECUTORS[sub[0].strategy](sub, mesh)
+        per_run = (time.time() - g0) / len(sub)
+        for i, e, out in zip(idxs, sub, outs):
+            results[i] = finalize_result(e, out, per_run)
+        n_groups += 1
+    for i in sequential:
+        results[i] = run(exps[i])
+        n_groups += 1
+    return BatchResult(runs=results, wall_time_s=time.time() - t0,
+                       n_compiled_groups=n_groups)

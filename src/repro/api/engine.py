@@ -65,14 +65,9 @@ class Experiment:
                 else list(range(len(self.client_iters))))
 
 
-def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
-    """Execute an Experiment through the strategy registry and return a
-    typed RunResult. Accepts either an Experiment or its fields as
-    keyword arguments."""
-    if experiment is None:
-        experiment = Experiment(**kwargs)
-    elif kwargs:
-        experiment = dataclasses.replace(experiment, **kwargs)
+def warn_unsupported_fields(experiment: Experiment) -> None:
+    """Warn when an optional Experiment field is set that the strategy
+    does not honor (shared by `run` and `run_batch`)."""
     spec = get_strategy_spec(experiment.strategy)
     for field, is_set in (("init_params", experiment.init_params is not None),
                           ("order", experiment.order is not None),
@@ -82,9 +77,13 @@ def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
                 f"strategy {experiment.strategy!r} ignores "
                 f"Experiment.{field}; it honors "
                 f"{sorted(spec.supports) or 'no optional fields'}",
-                UserWarning, stacklevel=2)
-    t0 = time.time()
-    out = spec.fn(experiment)
+                UserWarning, stacklevel=3)
+
+
+def finalize_result(experiment: Experiment, out, wall_time_s: float,
+                    ) -> RunResult:
+    """Wrap a StrategyOutput into a RunResult: final-metric resolution plus
+    timing (shared by `run` and the batched executors)."""
     final = None
     if experiment.eval_fn is not None:
         # Sequential strategies already evaluated the final params as the
@@ -102,5 +101,20 @@ def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
         clients=out.clients,
         rounds=out.rounds,
         final_metric=final,
-        wall_time_s=time.time() - t0,
+        wall_time_s=wall_time_s,
         final_pool=out.final_pool)
+
+
+def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
+    """Execute an Experiment through the strategy registry and return a
+    typed RunResult. Accepts either an Experiment or its fields as
+    keyword arguments."""
+    if experiment is None:
+        experiment = Experiment(**kwargs)
+    elif kwargs:
+        experiment = dataclasses.replace(experiment, **kwargs)
+    spec = get_strategy_spec(experiment.strategy)
+    warn_unsupported_fields(experiment)
+    t0 = time.time()
+    out = spec.fn(experiment)
+    return finalize_result(experiment, out, time.time() - t0)

@@ -83,6 +83,30 @@ class RunResult:
 
 
 @dataclasses.dataclass
+class BatchResult:
+    """What `api.run_batch` returns: one RunResult per experiment, in input
+    order, plus batch-level accounting. `wall_time_s` is the whole batch's
+    wall clock (per-run `RunResult.wall_time_s` is the amortized share);
+    `n_compiled_groups` counts the vmapped program groups the batch was
+    partitioned into (1 = the whole sweep ran as one jitted program)."""
+    runs: List["RunResult"]
+    wall_time_s: float = 0.0
+    n_compiled_groups: int = 0
+
+    def __len__(self) -> int:
+        return len(self.runs)
+
+    def __getitem__(self, i: int) -> "RunResult":
+        return self.runs[i]
+
+    def __iter__(self):
+        return iter(self.runs)
+
+    def final_metrics(self) -> List[Optional[float]]:
+        return [r.final_metric for r in self.runs]
+
+
+@dataclasses.dataclass
 class StrategyOutput:
     """What a strategy hands back to the engine (the engine adds timing
     and the final metric to build the RunResult)."""

@@ -27,27 +27,43 @@ from repro.optim.optimizers import Optimizer
 PyTree = Any
 
 
-def regularized_loss(loss_fn: Callable, fed: FedConfig,
-                     backend: PoolBackend) -> Callable:
-    """Eq. 9: L(m) = ℓ(m; D_i) − α·d1 + β·d2, with the appendix's
-    log-calibration. d1 comes from the pool backend, so any registered
-    representation plugs in without touching this function."""
+def hp_regularized_loss(loss_fn: Callable, fed: FedConfig,
+                        backend: PoolBackend) -> Callable:
+    """Eq. 9 with (α, β) as *traced arguments* instead of baked constants:
+    ``full_loss(params, batch, pool, alpha, beta)``. The batched engine
+    threads per-run (α, β) vectors through one compiled program (the Fig. 10
+    grid); the sequential path closes over ``fed.alpha``/``fed.beta`` —
+    multiplying by a traced scalar and by the equal Python constant produce
+    the same bits, so both paths share this core."""
 
-    def full_loss(params, batch, pool):
+    def full_loss(params, batch, pool, alpha, beta):
         task = loss_fn(params, batch)
         total = task
         if fed.use_d1:
             d1 = backend.d1(params, pool, fed.distance_measure)
             if fed.log_scale_distances:
                 d1 = D.log_scale(d1, task)
-            total = total - fed.alpha * d1
+            total = total - alpha * d1
         if fed.use_d2:
             d2 = D.d2_anchor_distance(params, pool.first(),
                                       fed.distance_measure)
             if fed.log_scale_distances:
                 d2 = D.log_scale(d2, task)
-            total = total + fed.beta * d2
+            total = total + beta * d2
         return total, task
+
+    return full_loss
+
+
+def regularized_loss(loss_fn: Callable, fed: FedConfig,
+                     backend: PoolBackend) -> Callable:
+    """Eq. 9: L(m) = ℓ(m; D_i) − α·d1 + β·d2, with the appendix's
+    log-calibration. d1 comes from the pool backend, so any registered
+    representation plugs in without touching this function."""
+    hp_loss = hp_regularized_loss(loss_fn, fed, backend)
+
+    def full_loss(params, batch, pool):
+        return hp_loss(params, batch, pool, fed.alpha, fed.beta)
 
     return full_loss
 
@@ -81,17 +97,67 @@ def make_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
     return step_fn
 
 
+def make_batched_plain_step(loss_fn: Callable, opt: Optimizer):
+    """Vmapped variant of ``make_plain_step``: every argument except the
+    step counter carries a leading run axis, so B independent runs advance
+    in one dispatch. Per-slice math is the unbatched step's graph under
+    ``vmap`` — the bit-identity contract `run_batch` tests rely on."""
+
+    def one_step(params, opt_state, batch, step):
+        task, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return params, opt_state, task
+
+    return jax.jit(jax.vmap(one_step, in_axes=(0, 0, 0, None)),
+                   donate_argnums=(0, 1))
+
+
+def make_batched_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
+                           backend: PoolBackend):
+    """Vmapped regularized step: stacked params/opt-state/batches/pools plus
+    per-run (α, β) vectors — a whole seed sweep or (α, β) grid is one jitted
+    program instead of |sweep| sequential dispatches."""
+    full_loss = hp_regularized_loss(loss_fn, fed, backend)
+
+    def one_step(params, opt_state, batch, pool, alpha, beta, step):
+        (_, task), grads = jax.value_and_grad(
+            lambda p: full_loss(p, batch, pool, alpha, beta),
+            has_aux=True)(params)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return params, opt_state, task
+
+    return jax.jit(jax.vmap(one_step, in_axes=(0, 0, 0, 0, 0, 0, None)),
+                   donate_argnums=(0, 1))
+
+
 class _CompiledSteps(NamedTuple):
     opt: Optimizer
     pool_step: Callable
     plain_step: Callable
+    batched_pool_step: Callable
+    batched_plain_step: Callable
 
 
-# (loss_fn, fed, opt_name, lr, wd, backend_name) → _CompiledSteps, bounded
-# LRU. The jitted steps close over loss_fn, so a weak-keyed cache could
-# never evict (the value keeps its own key alive); a size cap bounds the
-# retained compiled executables instead.
-_STEP_CACHE: "OrderedDict[tuple, _CompiledSteps]" = OrderedDict()
+class StepKey(NamedTuple):
+    """Typed step-cache key. A NamedTuple (not an ad-hoc tuple) so the
+    optimizer-override fields have *named positions* — an override passed in
+    a different order can never alias another config's entry — and so the
+    batched variants live inside the same ``_CompiledSteps`` value instead
+    of doubling the cache footprint with a second key shape."""
+    loss_fn: Callable
+    fed: FedConfig
+    opt_name: str
+    lr: float
+    wd: float
+    backend_name: str
+
+
+# StepKey → _CompiledSteps, bounded LRU. The jitted steps close over
+# loss_fn, so a weak-keyed cache could never evict (the value keeps its own
+# key alive); a size cap bounds the retained compiled executables instead.
+# ``jax.jit`` wrappers are lazy: the batched variants cost nothing until a
+# ``run_batch`` call actually traces them.
+_STEP_CACHE: "OrderedDict[StepKey, _CompiledSteps]" = OrderedDict()
 _STEP_CACHE_MAX = 8
 
 
@@ -103,9 +169,12 @@ def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
         return _CompiledSteps(
             opt=opt,
             pool_step=make_pool_step(loss_fn, fed, opt, backend),
-            plain_step=make_plain_step(loss_fn, opt))
+            plain_step=make_plain_step(loss_fn, opt),
+            batched_pool_step=make_batched_pool_step(loss_fn, fed, opt,
+                                                     backend),
+            batched_plain_step=make_batched_plain_step(loss_fn, opt))
 
-    key = (loss_fn, fed, opt_name, lr, wd, backend.name)
+    key = StepKey(loss_fn, fed, opt_name, lr, wd, backend.name)
     try:
         cached = _STEP_CACHE.get(key)
     except TypeError:            # loss_fn not hashable: skip the cache
@@ -118,6 +187,15 @@ def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
     else:
         _STEP_CACHE.move_to_end(key)
     return cached
+
+
+# Jitted batched pool operations, shared process-wide: an *eager* vmap here
+# would re-trace per call and dispatch unfused per-leaf ops — measured ~100×
+# the jitted cost on an MLP-sized model, enough to erase the whole batching
+# win. jax.jit caches per pool treedef/shape, so every backend gets its own
+# compiled version on first use.
+_batched_pool_average = jax.jit(jax.vmap(lambda pool: pool.average()))
+_batched_pool_append = jax.jit(jax.vmap(lambda pool, m: pool.append(m)))
 
 
 class LocalTrainer:
@@ -144,6 +222,11 @@ class LocalTrainer:
         self.opt = compiled.opt
         self.pool_step = compiled.pool_step
         self.plain_step = compiled.plain_step
+        self.batched_pool_step = compiled.batched_pool_step
+        self.batched_plain_step = compiled.batched_plain_step
+        self._batched_opt_init = jax.jit(jax.vmap(self.opt.init))
+        self._batched_pool_create = jax.jit(
+            jax.vmap(lambda m: self.backend.create(m, self.fed)))
 
     # -- step loop ----------------------------------------------------------
 
@@ -196,3 +279,75 @@ class LocalTrainer:
             if on_model_end is not None:
                 on_model_end(rec, m_j)
         return pool.average(), pool, records
+
+    # -- batched variants (B independent runs, leading run axis) ------------
+
+    def train_batched(self, params: PyTree, data_iters: List[Any],
+                      n_steps: int, *, pools: Any = None,
+                      alphas: Optional[jax.Array] = None,
+                      betas: Optional[jax.Array] = None,
+                      step_fn: Optional[Callable] = None,
+                      ) -> Tuple[PyTree, jax.Array]:
+        """`train` over a stacked (B, …) params pytree and B data iterators:
+        each step stacks one batch per run and advances all runs in a single
+        vmapped dispatch. Returns (stacked params, (B,) last task losses)."""
+        params = jax.tree.map(jnp.copy, params)   # steps donate buffers
+        opt_state = self._batched_opt_init(params)
+        task = jnp.zeros((len(data_iters),))
+        for s in range(n_steps):
+            batch = stack_trees([next(it) for it in data_iters])
+            if step_fn is not None:
+                params, opt_state, task = step_fn(params, opt_state, batch,
+                                                  jnp.int32(s))
+            elif pools is None:
+                params, opt_state, task = self.batched_plain_step(
+                    params, opt_state, batch, jnp.int32(s))
+            else:
+                params, opt_state, task = self.batched_pool_step(
+                    params, opt_state, batch, pools, alphas, betas,
+                    jnp.int32(s))
+        return params, task
+
+    def local_client_train_batched(self, m_in: PyTree, data_iters: List[Any],
+                                   alphas: jax.Array, betas: jax.Array,
+                                   ) -> Tuple[PyTree, Any,
+                                              List[List[ModelRecord]]]:
+        """`local_client_train` over B runs at once: B pools seeded from the
+        stacked incoming models, S diversity-regularized models trained per
+        run in lockstep (the loop structure is static across the batch —
+        enforced by `run_batch`'s grouping). Returns (stacked pool averages,
+        stacked pools, per-run ModelRecord lists)."""
+        fed = self.fed
+        b = len(data_iters)
+        if not fed.use_pool:
+            params, task = self.train_batched(m_in, data_iters, fed.e_local)
+            return params, None, [[] for _ in range(b)]
+
+        pools = self._batched_pool_create(m_in)
+        records: List[List[ModelRecord]] = [[] for _ in range(b)]
+        for j in range(fed.pool_size):          # train S models per run
+            m_j = _batched_pool_average(pools)
+            m_j, task = self.train_batched(m_j, data_iters, fed.e_local,
+                                           pools=pools, alphas=alphas,
+                                           betas=betas)
+            pools = _batched_pool_append(pools, m_j)
+            for i in range(b):
+                records[i].append(ModelRecord(index=j,
+                                              task_loss=float(task[i])))
+        return _batched_pool_average(pools), pools, records
+
+
+def stack_trees(trees: List[PyTree]) -> PyTree:
+    """Stack a list of structurally-identical pytrees along a new leading
+    run axis. Mismatched leaf shapes raise with the offending path."""
+    try:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            "run_batch requires structurally identical pytrees across the "
+            f"batch (same leaves, shapes and dtypes): {e}") from e
+
+
+def unstack_tree(tree: PyTree, i: int) -> PyTree:
+    """Slice run `i` out of a stacked pytree (inverse of `stack_trees`)."""
+    return jax.tree.map(lambda x: x[i], tree)

@@ -66,6 +66,25 @@ def d1_pool_distance(params: PyTree, pool: ModelPool,
     return jnp.sum(dists * mask) / pool.count.astype(F32)
 
 
+def pool_distance_stats_ref(w_flat: jax.Array,
+                            pool_flat: jax.Array) -> dict:
+    """jnp reference for ``repro.kernels.pool_distance.pool_distance_stats``
+    (the CPU path of the fused member-stats sweep), single-run or batched:
+
+    * w (P,), pool (C, P)      → stats each (C,)
+    * w (B, P), pool (B, C, P) → stats each (B, C)
+
+    Same contract as the kernel: per-member sq/l1/dot/norm in f32."""
+    w = w_flat.astype(F32)
+    m = pool_flat.astype(F32)
+    w_row = w[..., None, :]                      # (…, 1, P) vs (…, C, P)
+    r = w_row - m
+    return {"sq": jnp.sum(r * r, axis=-1),
+            "l1": jnp.sum(jnp.abs(r), axis=-1),
+            "dot": jnp.sum(w_row * m, axis=-1),
+            "norm": jnp.sum(m * m, axis=-1)}
+
+
 def d1_moment(params: PyTree, pool: MomentPool) -> jax.Array:
     """Moment-form d1 (RMS of the exact mean squared distance)."""
     return jnp.sqrt(pool.mean_sq_distance(params) + 1e-12)

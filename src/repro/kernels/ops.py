@@ -31,9 +31,11 @@ def flash_attention(q, k, v, *, causal=True, window=0, bq=128, bk=128):
 
 @functools.partial(jax.jit, static_argnames=("measure",))
 def pool_distances(w_flat, pool_flat, *, measure="l2"):
-    """Fused per-member distances (FedELMY d1/d2 hot path)."""
+    """Fused per-member distances (FedELMY d1/d2 hot path). Accepts either
+    a single run — w (P,), pool (C, P) → (C,) — or a `run_batch` stack —
+    w (B, P), pool (B, C, P) → (B, C) in one blocked sweep."""
     stats = pool_distance_stats(w_flat, pool_flat, interpret=_interpret())
-    w_sq = jnp.sum(jnp.square(w_flat.astype(jnp.float32)))
+    w_sq = jnp.sum(jnp.square(w_flat.astype(jnp.float32)), axis=-1)
     return distances_from_stats(stats, w_sq, measure)
 
 

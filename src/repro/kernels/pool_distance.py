@@ -29,57 +29,80 @@ from repro.kernels.compat import CompilerParams
 BLOCK_P = 65536          # 256 KiB f32 per member-row tile
 
 
-def _pd_kernel(w_ref, pool_ref, sq_ref, l1_ref, dot_ref, norm_ref, *,
-               n_blocks: int):
-    i = pl.program_id(0)
+def _pd_kernel_batched(w_ref, pool_ref, sq_ref, l1_ref, dot_ref, norm_ref, *,
+                       n_blocks: int):
+    # grid (B, n_blocks): the block index iterates fastest, so the (b, ·)
+    # output tile is revisited across j and initialized at j == 0.
+    j = pl.program_id(1)
 
-    @pl.when(i == 0)
+    @pl.when(j == 0)
     def _init():
         sq_ref[...] = jnp.zeros_like(sq_ref)
         l1_ref[...] = jnp.zeros_like(l1_ref)
         dot_ref[...] = jnp.zeros_like(dot_ref)
         norm_ref[...] = jnp.zeros_like(norm_ref)
 
-    w = w_ref[...].astype(jnp.float32)          # (1, BP)
-    m = pool_ref[...].astype(jnp.float32)       # (C, BP)
+    w = w_ref[...].astype(jnp.float32)          # (1, BP)       run b's tile
+    m = pool_ref[0].astype(jnp.float32)         # (C, BP)       run b's pool
     r = w - m
-    sq_ref[...] += jnp.sum(r * r, axis=1, keepdims=True)
-    l1_ref[...] += jnp.sum(jnp.abs(r), axis=1, keepdims=True)
-    dot_ref[...] += jnp.sum(w * m, axis=1, keepdims=True)
-    norm_ref[...] += jnp.sum(m * m, axis=1, keepdims=True)
+    sq_ref[0] += jnp.sum(r * r, axis=1, keepdims=True)
+    l1_ref[0] += jnp.sum(jnp.abs(r), axis=1, keepdims=True)
+    dot_ref[0] += jnp.sum(w * m, axis=1, keepdims=True)
+    norm_ref[0] += jnp.sum(m * m, axis=1, keepdims=True)
 
 
 def pool_distance_stats(w_flat, pool_flat, *, block_p=BLOCK_P,
                         interpret=False):
-    """w_flat: (P,) live model; pool_flat: (C, P) stacked pool members.
-    Returns dict of per-member stats: sq, l1, dot, norm — each (C,)."""
-    c, p = pool_flat.shape
+    """Fused per-member statistics, single-run or batched:
+
+    * w_flat (P,), pool_flat (C, P)        → stats each (C,)
+    * w_flat (B, P), pool_flat (B, C, P)   → stats each (B, C) — B runs'
+      pools in ONE blocked HBM sweep (grid (B, n_blocks)); `run_batch`'s
+      experiment axis rides the leading grid dimension instead of paying B
+      separate kernel launches. The single-run form is the B=1 slice of
+      the same kernel.
+
+    Returns dict of stats: sq, l1, dot, norm."""
+    if w_flat.ndim == 1:
+        stats = _pool_distance_stats_batched(
+            w_flat[None], pool_flat[None], block_p=block_p,
+            interpret=interpret)
+        return {k: v[0] for k, v in stats.items()}
+    return _pool_distance_stats_batched(w_flat, pool_flat, block_p=block_p,
+                                        interpret=interpret)
+
+
+def _pool_distance_stats_batched(w_flat, pool_flat, *, block_p=BLOCK_P,
+                                 interpret=False):
+    b, c, p = pool_flat.shape
+    assert w_flat.shape == (b, p), (w_flat.shape, pool_flat.shape)
     pad = (-p) % block_p
-    if pad:
-        w_flat = jnp.pad(w_flat, (0, pad))
-        pool_flat = jnp.pad(pool_flat, ((0, 0), (0, pad)))
+    if pad:                       # ragged tail: zero-pad to the block grid
+        w_flat = jnp.pad(w_flat, ((0, 0), (0, pad)))
+        pool_flat = jnp.pad(pool_flat, ((0, 0), (0, 0), (0, pad)))
     n_blocks = (p + pad) // block_p
 
-    kernel = functools.partial(_pd_kernel, n_blocks=n_blocks)
+    kernel = functools.partial(_pd_kernel_batched, n_blocks=n_blocks)
     outs = pl.pallas_call(
         kernel,
-        grid=(n_blocks,),
+        grid=(b, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, block_p), lambda i: (0, i)),
-            pl.BlockSpec((c, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, block_p), lambda i, j: (i, j)),
+            pl.BlockSpec((1, c, block_p), lambda i, j: (i, 0, j)),
         ],
-        out_specs=[pl.BlockSpec((c, 1), lambda i: (0, 0))] * 4,
-        out_shape=[jax.ShapeDtypeStruct((c, 1), jnp.float32)] * 4,
+        out_specs=[pl.BlockSpec((1, c, 1), lambda i, j: (i, 0, 0))] * 4,
+        out_shape=[jax.ShapeDtypeStruct((b, c, 1), jnp.float32)] * 4,
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(w_flat[None, :], pool_flat)
-    sq, l1, dot, norm = [o[:, 0] for o in outs]
+    )(w_flat, pool_flat)
+    sq, l1, dot, norm = [o[:, :, 0] for o in outs]
     return {"sq": sq, "l1": l1, "dot": dot, "norm": norm}
 
 
 def distances_from_stats(stats, w_sq_norm, measure: str):
-    """Per-member distances from fused stats. w_sq_norm = Σ w² (scalar)."""
+    """Per-member distances from fused stats. w_sq_norm = Σ w² — scalar for
+    (C,) stats, (B,) for batched (B, C) stats."""
     if measure == "l2":
         return jnp.sqrt(stats["sq"] + 1e-12)
     if measure == "squared_l2":
@@ -87,6 +110,9 @@ def distances_from_stats(stats, w_sq_norm, measure: str):
     if measure == "l1":
         return stats["l1"]
     if measure == "cosine":
+        w_sq = jnp.asarray(w_sq_norm)
+        if stats["dot"].ndim == 2 and w_sq.ndim == 1:
+            w_sq = w_sq[:, None]              # (B,) → (B, 1) vs (B, C)
         return 1.0 - stats["dot"] / (
-            jnp.sqrt(w_sq_norm + 1e-12) * jnp.sqrt(stats["norm"] + 1e-12))
+            jnp.sqrt(w_sq + 1e-12) * jnp.sqrt(stats["norm"] + 1e-12))
     raise ValueError(measure)

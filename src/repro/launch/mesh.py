@@ -25,6 +25,18 @@ def make_local_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_batch_mesh(n_runs: int = 0):
+    """Mesh for `repro.api.run_batch`: every local device on the data axis
+    (the batch axis shards over it — sharding/specs.run_batch_specs). With
+    `n_runs` > 0, clips to the largest device count that divides the run
+    count so no run straddles devices."""
+    n = len(jax.devices())
+    if n_runs:
+        while n > 1 and n_runs % n:
+            n -= 1
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
 # TPU v5e roofline constants (per chip) — used by repro.analysis.roofline
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

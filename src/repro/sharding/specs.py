@@ -114,6 +114,34 @@ def batch_specs(batch_shapes: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map_with_path(f, batch_shapes)
 
 
+def run_batch_specs(stacked_shapes: Any, mesh: Mesh) -> Any:
+    """Specs for `repro.api.run_batch` stacked pytrees: the leading *run*
+    axis shards over the mesh data axes (each device advances its slice of
+    the experiment batch; per-run math never crosses the axis so no
+    collectives are introduced), everything else replicates. Falls back to
+    fewer data axes / replication when the run count is indivisible."""
+    dp = dp_axes(mesh)
+
+    def f(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        for k in range(len(dp), 0, -1):
+            n = _axsize(mesh, dp[:k])
+            if b % n == 0 and b >= n:
+                return P(dp[:k] if len(dp[:k]) > 1 else dp[0],
+                         *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(f, stacked_shapes)
+
+
+def shard_run_batch(tree: Any, mesh: Mesh) -> Any:
+    """Place a stacked run-batch pytree on `mesh` per `run_batch_specs`."""
+    specs = run_batch_specs(tree, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
 def cache_specs(cache_shapes: Any, mesh: Mesh) -> Any:
     """Decode caches: (L, B, S, ...) — B over data axes when divisible,
     sequence/window axis over `model` (flash-decoding layout), H of SSM

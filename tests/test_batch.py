@@ -1,0 +1,352 @@
+"""Tests for `repro.api.run_batch`: bit-identity with sequential `run`,
+grouping/fallback behavior, BatchAxes expansion, and the step-cache
+regression guards (typed key + bounded eviction with batched variants)."""
+import dataclasses
+import itertools
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (BatchAxes, BatchResult, Callbacks, Experiment, run,
+                       run_batch)
+from repro.configs import FedConfig
+
+KEY = jax.random.PRNGKey(0)
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _tiny_model():
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (4, 3)),
+                "b": jnp.zeros((3,))}
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(batch["y"], 3)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    def forward(params, batch):
+        return batch["x"] @ params["w"] + params["b"]
+
+    return TinyModel(init, loss_fn, forward)
+
+
+def _client_iter(seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 4))
+    y = jnp.arange(8) % 3
+    return itertools.cycle([{"x": x, "y": y}])
+
+
+def _iters(seed=0):
+    return [_client_iter(0), _client_iter(1)]
+
+
+FED = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                learning_rate=1e-2)
+
+
+def _metric_fn(model):
+    hold = next(_client_iter(9))
+    return lambda p: -model.loss_fn(p, hold)
+
+
+def _assert_trees_bitwise_equal(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: run_batch == N sequential runs (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+def test_run_batch_seeds_bit_identical_to_sequential_fedelmy():
+    """4-seed fedelmy sweep as ONE compiled group: per-run params, metrics
+    and records must be bit-identical to 4 sequential `run` calls."""
+    model = _tiny_model()
+    metric = _metric_fn(model)
+    seeds = [0, 1, 2, 3]
+    seq = [run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                          strategy="fedelmy", key=jax.random.PRNGKey(s),
+                          eval_fn=metric))
+           for s in seeds]
+    batch = run_batch(
+        Experiment(model=model, client_iters=_iters(), fed=FED,
+                   strategy="fedelmy", eval_fn=metric),
+        axes=BatchAxes(seeds=seeds, client_iters_for_seed=_iters))
+    assert isinstance(batch, BatchResult)
+    assert len(batch) == 4
+    assert batch.n_compiled_groups == 1     # the whole sweep, one program
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params)
+        assert b.final_metric == s.final_metric
+        assert len(b.clients) == len(s.clients)
+        for cs, cb in zip(s.clients, b.clients):
+            assert (cb.client, cb.rank) == (cs.client, cs.rank)
+            assert cb.global_metric == cs.global_metric
+            assert [m.task_loss for m in cb.models] == \
+                [m.task_loss for m in cs.models]
+        # the final pool rides along, sliced per run
+        _assert_trees_bitwise_equal(s.final_pool.members,
+                                    b.final_pool.members)
+
+
+@pytest.mark.parametrize("strategy", ["fedseq", "dfedavgm", "dfedsam"])
+def test_run_batch_bit_identical_baselines(strategy):
+    model = _tiny_model()
+    seeds = [0, 1]
+    seq = [run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                          strategy=strategy, key=jax.random.PRNGKey(s)))
+           for s in seeds]
+    batch = run_batch(
+        Experiment(model=model, client_iters=_iters(), fed=FED,
+                   strategy=strategy),
+        axes=BatchAxes(seeds=seeds, client_iters_for_seed=_iters))
+    assert batch.n_compiled_groups == 1
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params, strategy)
+
+
+def test_run_batch_alpha_beta_grid_one_group():
+    """The Fig. 10 sweep shape: an (α, β) grid is ONE compiled program
+    (α/β are traced per-run scalars), still bit-identical to sequential
+    runs that bake each (α, β) as constants."""
+    model = _tiny_model()
+    grid = [{"alpha": a, "beta": b}
+            for a in (0.03, 0.12) for b in (0.5, 2.0)]
+    base = Experiment(model=model, client_iters=_iters(), fed=FED,
+                      strategy="fedelmy", key=KEY)
+    batch = run_batch(base, axes=BatchAxes(
+        fed_grid=grid, client_iters_for_run=lambda i: _iters()))
+    assert len(batch) == 4
+    assert batch.n_compiled_groups == 1
+    for g, b in zip(grid, batch):
+        s = run(dataclasses.replace(
+            base, client_iters=_iters(),
+            fed=dataclasses.replace(FED, **g)))
+        _assert_trees_bitwise_equal(s.params, b.params, repr(g))
+        assert b.fed.alpha == g["alpha"] and b.fed.beta == g["beta"]
+
+
+@pytest.mark.slow
+def test_run_batch_bit_identical_on_cnn():
+    """Same contract on the paper CNN (convolutions exercise a different
+    XLA lowering under vmap than the tiny linear model)."""
+    from repro.configs import get_arch
+    from repro.data import (batch_iterator, dirichlet_partition,
+                            make_image_dataset)
+    from repro.models import build_model
+    model = build_model(get_arch("paper-cnn"))
+    ds = make_image_dataset(n_samples=400, seed=0, noise=2.0)
+    parts = dirichlet_partition(ds.labels, 2, 0.5, seed=0)
+
+    def iters(seed=0):
+        return [batch_iterator(
+                    {"images": ds.images[p], "labels": ds.labels[p]}, 32,
+                    seed=seed * 10 + i)
+                for i, p in enumerate(parts)]
+
+    fed = dataclasses.replace(FED, e_local=3, e_warmup=2, learning_rate=1e-3)
+    seeds = [0, 1]
+    seq = [run(Experiment(model=model, client_iters=iters(s), fed=fed,
+                          strategy="fedelmy", key=jax.random.PRNGKey(s)))
+           for s in seeds]
+    batch = run_batch(Experiment(model=model, client_iters=iters(), fed=fed,
+                                 strategy="fedelmy"),
+                      axes=BatchAxes(seeds=seeds,
+                                     client_iters_for_seed=iters))
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params)
+
+
+# ---------------------------------------------------------------------------
+# Grouping and fallback
+# ---------------------------------------------------------------------------
+
+def test_mixed_strategies_group_and_fall_back():
+    """A mixed experiment list: batchable runs group, strategies without a
+    batched executor and callback-bearing runs fall back to sequential —
+    result order always matches input order."""
+    model = _tiny_model()
+    seen = []
+    cb = Callbacks(on_model_end=lambda rec, p: seen.append(rec.index))
+    def mk(**kw):
+        kw = {"strategy": "fedelmy", **kw}
+        return Experiment(model=model, client_iters=_iters(), fed=FED,
+                          key=KEY, **kw)
+    exps = [mk(), mk(strategy="metafed"), mk(callbacks=cb), mk()]
+    batch = run_batch(experiments=exps)
+    assert [r.strategy for r in batch] == ["fedelmy", "metafed", "fedelmy",
+                                           "fedelmy"]
+    # callbacks still fired (seq path): pool_size models × 2 clients
+    assert len(seen) == FED.pool_size * 2
+    # 1 vmapped group (runs 0+3) + 2 sequential = 3 compiled groups
+    assert batch.n_compiled_groups == 3
+    # the two batched runs share key/data => identical results
+    _assert_trees_bitwise_equal(batch[0].params, batch[3].params)
+
+
+def test_distance_measure_change_splits_groups():
+    """Static FedConfig fields (here distance_measure) change the compiled
+    graph: runs land in separate groups; alpha/beta do not split."""
+    model = _tiny_model()
+    mk = lambda fed: Experiment(model=model, client_iters=_iters(),  # noqa: E731
+                                fed=fed, strategy="fedelmy", key=KEY)
+    exps = [mk(FED), mk(dataclasses.replace(FED, distance_measure="l1")),
+            mk(dataclasses.replace(FED, alpha=0.5))]
+    batch = run_batch(experiments=exps)
+    # run 0 and 2 batch together (alpha is traced), run 1 is a singleton
+    assert batch.n_compiled_groups == 2
+    assert all(np.isfinite(x).all()
+               for r in batch for x in jax.tree.leaves(r.params))
+
+
+def test_singleton_group_uses_plain_run():
+    model = _tiny_model()
+    batch = run_batch(Experiment(model=model, client_iters=_iters(),
+                                 fed=FED, strategy="fedelmy", key=KEY))
+    assert len(batch) == 1 and batch.n_compiled_groups == 1
+    seq = run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                         strategy="fedelmy", key=KEY))
+    _assert_trees_bitwise_equal(seq.params, batch[0].params)
+
+
+def test_batch_axes_expansion_is_cartesian():
+    axes = BatchAxes(seeds=[0, 1], fed_grid=[{"alpha": 0.1}, {"alpha": 0.2}],
+                     strategy_options_grid=[{}, {"rho": 0.1}])
+    base = Experiment(model=_tiny_model(), client_iters=_iters(), fed=FED)
+    exps = axes.expand(base)
+    assert len(exps) == 8
+    assert {e.fed.alpha for e in exps} == {0.1, 0.2}
+    assert exps[0].key is not None          # seed → key
+
+    empty = run_batch(experiments=[])
+    assert len(empty) == 0 and empty.n_compiled_groups == 0
+
+    with pytest.raises(ValueError, match="Experiment"):
+        run_batch(axes=axes)
+
+
+def test_shared_iterators_across_runs_rejected():
+    """Stateful iterators shared across runs of a batched group would be
+    round-robin-drained (run 0 sees batches 0, B, 2B, …) — the engine must
+    reject the sharing instead of silently breaking bit-identity."""
+    model = _tiny_model()
+    shared = _iters()
+    base = Experiment(model=model, client_iters=shared, fed=FED,
+                      strategy="fedelmy", key=KEY)
+    with pytest.raises(ValueError, match="share client iterator"):
+        run_batch(base, axes=BatchAxes(seeds=[0, 1]))  # no factory
+    # sharing *within* one run is the user's own structure — allowed
+    one = _client_iter(0)
+    ok = run_batch(experiments=[
+        Experiment(model=model, client_iters=[one, one], fed=FED,
+                   strategy="fedelmy", key=KEY),
+        Experiment(model=model, client_iters=_iters(), fed=FED,
+                   strategy="fedelmy", key=KEY)])
+    assert len(ok) == 2 and ok.n_compiled_groups == 1
+
+
+def test_different_loss_fn_never_aliases_in_a_group():
+    """Two models with same-shaped params but different losses must not
+    batch together (the group trains through ONE compiled loss)."""
+    a, b = _tiny_model(), _tiny_model()   # distinct loss_fn objects
+    batch = run_batch(experiments=[
+        Experiment(model=a, client_iters=_iters(), fed=FED,
+                   strategy="fedelmy", key=KEY),
+        Experiment(model=b, client_iters=_iters(), fed=FED,
+                   strategy="fedelmy", key=KEY)])
+    assert batch.n_compiled_groups == 2  # singleton fallbacks, not one vmap
+    _assert_trees_bitwise_equal(batch[0].params, batch[1].params)
+
+
+def test_fallback_runs_warn_once():
+    """Unsupported-field warnings must not double up on the sequential
+    fallback path (run() already warns there)."""
+    import warnings as W
+    model = _tiny_model()
+    exp = Experiment(model=model, client_iters=_iters(), fed=FED,
+                     strategy="fedelmy_pfl", key=KEY, order=[1, 0])
+    with W.catch_warnings(record=True) as caught:
+        W.simplefilter("always")
+        run_batch(experiments=[exp])
+    ours = [w for w in caught if "ignores Experiment.order" in str(w.message)]
+    assert len(ours) == 1
+
+
+def test_run_batch_structure_mismatch_raises():
+    """Stacking structurally different models must fail loudly, not batch."""
+    model = _tiny_model()
+    big = TinyModel(
+        init=lambda key: {"w": jnp.zeros((5, 3)), "b": jnp.zeros((3,))},
+        loss_fn=model.loss_fn, forward=model.forward)
+    exps = [Experiment(model=model, client_iters=_iters(), fed=FED,
+                       strategy="fedelmy", key=KEY),
+            Experiment(model=big, client_iters=_iters(), fed=FED,
+                       strategy="fedelmy", key=KEY)]
+    with pytest.raises(ValueError, match="structurally identical"):
+        run_batch(experiments=exps)
+
+
+def test_run_batch_on_local_mesh():
+    """The batch axis shards over the mesh data axis (single-device CPU:
+    placement is a no-op replicate, but the code path must hold)."""
+    from repro.launch.mesh import make_batch_mesh
+    model = _tiny_model()
+    mesh = make_batch_mesh(n_runs=2)
+    batch = run_batch(Experiment(model=model, client_iters=_iters(),
+                                 fed=FED, strategy="fedelmy"),
+                      axes=BatchAxes(seeds=[0, 1],
+                                     client_iters_for_seed=_iters),
+                      mesh=mesh)
+    seq = run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                         strategy="fedelmy", key=jax.random.PRNGKey(0)))
+    _assert_trees_bitwise_equal(seq.params, batch[0].params)
+
+
+# ---------------------------------------------------------------------------
+# Step-cache regressions (typed key, bounded eviction, no footprint doubling)
+# ---------------------------------------------------------------------------
+
+def test_step_cache_key_is_typed_namedtuple():
+    from repro.api.trainer import _STEP_CACHE, StepKey
+    from repro.api.trainer import LocalTrainer
+    model = _tiny_model()
+    LocalTrainer(model.loss_fn, FED)
+    assert _STEP_CACHE, "trainer construction must populate the cache"
+    assert all(isinstance(k, StepKey) for k in _STEP_CACHE)
+    # named override fields: transposed (lr, wd) values CANNOT alias
+    a = StepKey(model.loss_fn, FED, "adam", 0.1, 0.001, "stacked")
+    b = StepKey(model.loss_fn, FED, "adam", 0.001, 0.1, "stacked")
+    assert a != b and a.lr == b.wd
+
+
+def test_step_cache_bounded_eviction_counts_batched_variants_once():
+    """Regression: the vmapped step variants live inside the SAME cache
+    entry as the sequential steps — N configs occupy N entries (≤ cap),
+    not 2N — and eviction drops the oldest entry."""
+    from repro.api import trainer as T
+    model = _tiny_model()
+    T._STEP_CACHE.clear()
+    n = T._STEP_CACHE_MAX + 3
+    feds = [dataclasses.replace(FED, learning_rate=1e-3 * (i + 1))
+            for i in range(n)]
+    for fed in feds:
+        T.LocalTrainer(model.loss_fn, fed)
+    assert len(T._STEP_CACHE) == T._STEP_CACHE_MAX
+    cached_feds = {k.fed for k in T._STEP_CACHE}
+    assert feds[0] not in cached_feds       # oldest evicted
+    assert feds[-1] in cached_feds
+    # one entry carries sequential AND batched steps — reuse is a hit
+    before = len(T._STEP_CACHE)
+    tr = T.LocalTrainer(model.loss_fn, feds[-1])
+    assert len(T._STEP_CACHE) == before
+    assert tr.batched_pool_step is not None
+    assert tr.batched_plain_step is not None
+    T._STEP_CACHE.clear()

@@ -41,6 +41,7 @@ FED = FedConfig(n_clients=3, pool_size=2, e_local=12, e_warmup=6,
                 learning_rate=1e-3)
 
 
+@pytest.mark.slow
 def test_fedelmy_beats_random_and_produces_records(cnn_setup):
     model, iters, acc = cnn_setup
     res = run(Experiment(model=model, client_iters=iters, fed=FED,
@@ -56,6 +57,7 @@ def test_fedelmy_beats_random_and_produces_records(cnn_setup):
     assert all(bool(jnp.isfinite(x).all()) for x in leaves)
 
 
+@pytest.mark.slow
 def test_fedelmy_one_shot_communication_count(cnn_setup):
     """One-shot SFL: the chain makes exactly N-1 handoffs (paper Fig. 5) —
     verified structurally: one ClientRecord per client, in visit order."""
@@ -66,6 +68,7 @@ def test_fedelmy_one_shot_communication_count(cnn_setup):
     assert [c.rank for c in res.clients] == [0, 1, 2]
 
 
+@pytest.mark.slow
 def test_client_order_permutation(cnn_setup):
     model, iters, acc = cnn_setup
     res = run(Experiment(model=model, client_iters=iters, fed=FED,
@@ -75,6 +78,7 @@ def test_client_order_permutation(cnn_setup):
     assert res.final_metric > 0.25
 
 
+@pytest.mark.slow
 def test_fewshot_improves_or_holds(cnn_setup):
     model, iters, acc = cnn_setup
     fed = dataclasses.replace(FED, e_local=8, pool_size=1)
@@ -86,6 +90,7 @@ def test_fewshot_improves_or_holds(cnn_setup):
         res.rounds[0].global_metric - 0.1
 
 
+@pytest.mark.slow
 def test_baselines_run(cnn_setup):
     model, iters, acc = cnn_setup
     fed = dataclasses.replace(FED, e_local=6)
@@ -95,6 +100,7 @@ def test_baselines_run(cnn_setup):
         assert np.isfinite(res.final_metric), name
 
 
+@pytest.mark.slow
 def test_pfl_adaptation_runs(cnn_setup):
     model, iters, acc = cnn_setup
     fed = dataclasses.replace(FED, e_local=5, pool_size=1, e_warmup=3)
@@ -104,6 +110,7 @@ def test_pfl_adaptation_runs(cnn_setup):
     assert len(res.clients) == 3      # one record per parallel client
 
 
+@pytest.mark.slow
 def test_callbacks_fire_per_model_and_client(cnn_setup):
     from repro.api import Callbacks
     model, iters, acc = cnn_setup
@@ -120,6 +127,7 @@ def test_callbacks_fire_per_model_and_client(cnn_setup):
     assert seen["models"] == 3 * fed.pool_size
 
 
+@pytest.mark.slow
 def test_moment_backend_trains_finite():
     """Moment-form FedELMY trains and stays finite (exactness of the
     statistics is covered in test_core / test_api)."""

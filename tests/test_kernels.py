@@ -6,6 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # clean env: deterministic example sweep
+    from _hypothesis_compat import given, settings, st
+
 from repro.kernels import ops, ref
 from repro.kernels.pool_distance import distances_from_stats
 
@@ -82,6 +87,52 @@ def test_pool_distance(c, p, dtype, measure):
     np.testing.assert_allclose(np.asarray(d), np.asarray(gold),
                                rtol=1e-3 if dtype == jnp.bfloat16 else 1e-5,
                                atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+@given(b=st.integers(1, 4), c=st.integers(1, 5), p=st.integers(1, 700),
+       block_pow=st.integers(5, 9))
+@settings(max_examples=20, deadline=None)
+def test_pool_distance_stats_batched_matches_per_run_loop(b, c, p, block_pow):
+    """Property: the batched (B, C, P) kernel sweep equals a Python loop of
+    per-run (C, P) calls — including the ragged-padding edge where P is not
+    a multiple of block_p (the zero-padded tail must not leak into any
+    stat)."""
+    from repro.core.distances import pool_distance_stats_ref
+    from repro.kernels.pool_distance import pool_distance_stats
+    block_p = 2 ** block_pow            # 32 … 512, mostly not dividing p
+    ks = jax.random.split(jax.random.fold_in(KEY, b * 7919 + c * 131 + p), 2)
+    w = jax.random.normal(ks[0], (b, p))
+    pool = jax.random.normal(ks[1], (b, c, p))
+    got = pool_distance_stats(w, pool, block_p=block_p, interpret=True)
+    for v in got.values():
+        assert v.shape == (b, c)
+    for i in range(b):                  # per-run unbatched kernel calls
+        one = pool_distance_stats(w[i], pool[i], block_p=block_p,
+                                  interpret=True)
+        for k in got:
+            np.testing.assert_allclose(np.asarray(got[k][i]),
+                                       np.asarray(one[k]),
+                                       rtol=1e-5, atol=1e-4, err_msg=k)
+    refd = pool_distance_stats_ref(w, pool)   # jnp reference path
+    for k in got:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(refd[k]),
+                                   rtol=1e-5, atol=1e-4, err_msg=k)
+
+
+def test_pool_distances_batched_front_end():
+    """ops.pool_distances accepts the run_batch stacked shapes and agrees
+    with the single-run path for every measure."""
+    ks = jax.random.split(KEY, 2)
+    w = jax.random.normal(ks[0], (3, 2000))
+    pool = jax.random.normal(ks[1], (3, 4, 2000))
+    for measure in ("l2", "l1", "cosine", "squared_l2"):
+        batched = ops.pool_distances(w, pool, measure=measure)
+        assert batched.shape == (3, 4)
+        for i in range(3):
+            one = ops.pool_distances(w[i], pool[i], measure=measure)
+            np.testing.assert_allclose(np.asarray(batched[i]),
+                                       np.asarray(one), rtol=1e-5,
+                                       atol=1e-5, err_msg=measure)
 
 
 def test_pool_distance_matches_core_d1():

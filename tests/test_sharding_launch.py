@@ -9,8 +9,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_arch
 from repro.launch import steps as S
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import make_batch_mesh, make_local_mesh
 from repro.sharding import batch_specs, cache_specs, param_specs
+from repro.sharding.specs import run_batch_specs
 
 
 def _fake_mesh():
@@ -56,6 +57,30 @@ def test_batch_specs_data_parallel():
     shapes = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
     spec = batch_specs(shapes, _fake_mesh())
     assert spec["tokens"][0] == "data"
+
+
+def test_run_batch_specs_shard_run_axis_over_data():
+    """The run_batch batch-axis rule: leading run axis over the data axes
+    when divisible, replicate otherwise (never touch inner dims)."""
+    shapes = {"w": jax.ShapeDtypeStruct((32, 128, 64), jnp.float32),
+              "b": jax.ShapeDtypeStruct((32, 64), jnp.float32),
+              "scalar": jax.ShapeDtypeStruct((), jnp.float32)}
+    specs = run_batch_specs(shapes, _fake_mesh())
+    assert specs["w"][0] == "data" and specs["w"][1:] == (None, None)
+    assert specs["b"][0] == "data" and specs["b"][1] is None
+    assert specs["scalar"] == P()
+    # indivisible run count replicates rather than crashing
+    ragged = {"w": jax.ShapeDtypeStruct((3, 8), jnp.float32)}
+    assert run_batch_specs(ragged, _fake_mesh())["w"] == P(None, None)
+
+
+def test_make_batch_mesh_divides_run_count():
+    mesh = make_batch_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["model"] == 1
+    # n_runs clipping: data axis must divide the run count
+    n = make_batch_mesh(n_runs=7).shape["data"]
+    assert 7 % n == 0
 
 
 def test_cache_specs_seq_sharded():
