@@ -7,24 +7,23 @@ CIFAR-10 / PACS), at a scale that runs on this CPU host in minutes. The
 validated; absolute accuracies are dataset-dependent.
 
 Scale knobs are centralized here; benchmarks.run --quick shrinks them.
+Dataset/partition setup is scenario data (`repro.scenarios`, DESIGN.md
+§7): `bench_spec(name, **overrides)` scales a registered ScenarioSpec to
+the harness SCALE and `setup_from_spec` materializes it.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api import BatchAxes, Experiment, run, run_batch
 from repro.configs import FedConfig, get_arch
-from repro.data import (batch_iterator, dirichlet_partition,
-                        domain_shift_partition, make_domain_datasets,
-                        make_image_dataset)
 from repro.models import build_model
+from repro.scenarios import get_scenario, materialize
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                            "benchmarks")
@@ -83,47 +82,48 @@ def run_strategy_batch(strategy: str, model, fed: FedConfig, *,
         client_iters_for_run=iters_for_run))
 
 
+def bench_spec(name: str, **overrides):
+    """A registered `repro.scenarios` spec scaled to the harness SCALE —
+    benchmark setup configuration is *data* (a ScenarioSpec) plus scale
+    overrides, not bespoke partition/iterator glue."""
+    kw = dict(n_samples=SCALE["n"], n_test=SCALE["n_test"],
+              batch_size=SCALE["batch"], noise=NOISE)
+    kw.update(overrides)
+    return get_scenario(name).replace(**kw)
+
+
+def setup_from_spec(spec, seed=0, model=None):
+    """(model, iters, acc_fn) from a materialized scenario — the common
+    shape every tableX benchmark consumes."""
+    if model is None:
+        model = build_model(get_arch("paper-cnn"))
+    data = materialize(spec, seed)
+    return model, data.iterators(), _acc_fn(model, data.eval_dataset())
+
+
 def label_skew_setup(n_clients=4, beta=0.3, seed=0):
     """CIFAR-10 stand-in with Dirichlet(beta) label skew."""
-    cfg = get_arch("paper-cnn")
-    model = build_model(cfg)
-    ds = make_image_dataset(SCALE["n"], seed=seed, noise=NOISE)
-    test = make_image_dataset(SCALE["n_test"], seed=seed + 91, noise=NOISE)
-    parts = dirichlet_partition(ds.labels, n_clients, beta, seed=seed)
-    iters = [batch_iterator({"images": ds.images[p], "labels": ds.labels[p]},
-                            SCALE["batch"], seed=seed * 100 + i)
-             for i, p in enumerate(parts)]
-    return model, iters, _acc_fn(model, test)
+    spec = bench_spec("dir_label_skew", n_clients=n_clients,
+                      partitioner_params={"beta": beta})
+    return setup_from_spec(spec, seed)
 
 
 def domain_shift_setup(n_clients=4, seed=0, order=("photo", "art", "cartoon",
                                                    "sketch")):
     """PACS stand-in: one synthetic domain per client."""
-    cfg = get_arch("paper-cnn")
-    model = build_model(cfg)
-    doms = make_domain_datasets(SCALE["n"] // 4, seed=seed, noise=NOISE * 0.8)
-    clients = domain_shift_partition(doms, n_clients, order=order, seed=seed)
-    test_doms = make_domain_datasets(SCALE["n_test"] // 4, seed=seed + 91,
-                                     noise=NOISE * 0.8)
-    test_imgs = np.concatenate([d.images for d in test_doms.values()])
-    test_labels = np.concatenate([d.labels for d in test_doms.values()])
-    from repro.data.synthetic import SyntheticImageDataset
-    test = SyntheticImageDataset(test_imgs, test_labels, 10)
-    iters = [batch_iterator({"images": c.images, "labels": c.labels},
-                            min(SCALE["batch"], len(c.labels)),
-                            seed=seed * 100 + i)
-             for i, c in enumerate(clients)]
-    return model, iters, _acc_fn(model, test)
+    spec = bench_spec("domain_shift", n_clients=n_clients, noise=NOISE * 0.8,
+                      partitioner_params={"order": tuple(order)})
+    return setup_from_spec(spec, seed)
 
 
-def probe_mlp_setup(n_clients=4, beta=0.3, seed=0, width=64, batch=16):
+def probe_mlp_model(width=64):
     """Dispatch-bound sweep probe: a small dense classifier over 4×4-pooled
-    synthetic images on the same Dirichlet label-skew partition. FedELMY's
-    pool mechanics (Eq. 5–9 act in parameter space) are model-agnostic, so
-    (α, β)-surface sweeps map the regularizer response on this probe in
-    seconds — the regime `api.run_batch` amortizes (per-step compute ≈
-    dispatch cost, per-point compile walls dominate a sequential sweep).
-    Paper-scale accuracy claims stay on the full CNN (table1/fig9)."""
+    synthetic images. FedELMY's pool mechanics (Eq. 5–9 act in parameter
+    space) are model-agnostic, so (α, β)-surface sweeps map the regularizer
+    response on this probe in seconds — the regime `api.run_batch`
+    amortizes (per-step compute ≈ dispatch cost, per-point compile walls
+    dominate a sequential sweep). Paper-scale accuracy claims stay on the
+    full CNN (table1/fig9)."""
     from repro.models.layers import _he
     from repro.models.transformer import Model
     cfg = get_arch("paper-cnn")
@@ -152,20 +152,23 @@ def probe_mlp_setup(n_clients=4, beta=0.3, seed=0, width=64, batch=16):
                                    axis=-1)[:, 0]
         return jnp.mean(lse - gold)
 
-    model = Model(cfg, init, forward, loss_fn, None, None, None)
-    ds = make_image_dataset(SCALE["n"], seed=seed, noise=NOISE)
-    test = make_image_dataset(SCALE["n_test"], seed=seed + 91, noise=NOISE)
-    parts = dirichlet_partition(ds.labels, n_clients, beta, seed=seed)
+    return Model(cfg, init, forward, loss_fn, None, None, None)
+
+
+def probe_mlp_setup(n_clients=4, beta=0.3, seed=0, width=64, batch=16):
+    """The probe MLP on the Dirichlet label-skew scenario (see
+    `probe_mlp_model`). Returns (model, iters_for_run, acc_fn)."""
+    model = probe_mlp_model(width)
+    spec = bench_spec("dir_label_skew", n_clients=n_clients,
+                      partitioner_params={"beta": beta}, batch_size=batch)
+    data = materialize(spec, seed)
 
     def iters_for_run(i):
         # same seeds for every run: fresh iterator objects per call, but an
         # identical batch stream, so grid runs differ ONLY in (α, β)
-        return [batch_iterator(
-                    {"images": ds.images[p], "labels": ds.labels[p]},
-                    batch, seed=seed * 100 + j)
-                for j, p in enumerate(parts)]
+        return data.iterators()
 
-    return model, iters_for_run, _acc_fn(model, test)
+    return model, iters_for_run, _acc_fn(model, data.eval_dataset())
 
 
 def _acc_fn(model, test):

@@ -23,12 +23,15 @@ import traceback
 BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
               "table4_order", "fig5_comm_cost", "fig6_compute_matched",
               "fig9_distance_measures", "fig10_pool_heatmap", "table9_pfl",
-              "roofline_report")
+              "scenario_grid", "roofline_report")
 
 
 def _list() -> None:
-    """Enumerate registered benchmarks, strategies, and pool backends."""
+    """Enumerate registered benchmarks, strategies, pool backends,
+    scenarios, and partitioners."""
     from repro.api import list_pool_backends, list_strategies
+    from repro.scenarios import (get_scenario, list_partitioners,
+                                 list_scenarios)
     print("benchmarks:")
     for name in BENCHMARKS:
         print(f"  {name}")
@@ -37,6 +40,13 @@ def _list() -> None:
         print(f"  {name}")
     print("pool backends:")
     for name in list_pool_backends():
+        print(f"  {name}")
+    print("scenarios:")
+    for name in list_scenarios():
+        spec = get_scenario(name)
+        print(f"  {name} ({spec.family}, partitioner={spec.partitioner})")
+    print("partitioners:")
+    for name in list_partitioners():
         print(f"  {name}")
 
 

@@ -17,12 +17,20 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 PYTEST_ARGS=(-x -q)
 SMOKE=table1_accuracy
+FAST=0
 for arg in "$@"; do
   case "$arg" in
-    --fast) PYTEST_ARGS+=(-m "not slow"); SMOKE=fig10_pool_heatmap ;;
+    --fast) FAST=1; PYTEST_ARGS+=(-m "not slow"); SMOKE=fig10_pool_heatmap ;;
     *) echo "unknown flag: $arg (expected --fast)" >&2; exit 2 ;;
   esac
 done
+
+# The CI gate also measures coverage (coverage.xml, uploaded as a workflow
+# artifact alongside bench_smoke.*); local envs without pytest-cov just run
+# the plain suite.
+if [ "$FAST" = 1 ] && python -c "import pytest_cov" >/dev/null 2>&1; then
+  PYTEST_ARGS+=(--cov=repro --cov-report=xml)
+fi
 
 python -m pytest "${PYTEST_ARGS[@]}"
 # tee the full log to the console, keep only the `name,us,derived` contract

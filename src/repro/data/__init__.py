@@ -1,10 +1,17 @@
-from repro.data.partition import dirichlet_partition, domain_shift_partition
+from repro.data.partition import (dirichlet_partition, domain_shift_partition,
+                                  feature_shift_partition,
+                                  mixed_skew_partition,
+                                  quantity_skew_partition, severity_ladder,
+                                  shard_partition, train_val_split)
 from repro.data.synthetic import (SyntheticImageDataset, SyntheticTextDataset,
-                                  make_domain_datasets, make_image_dataset,
-                                  make_lm_dataset)
+                                  apply_domain, make_domain_datasets,
+                                  make_image_dataset, make_lm_dataset)
 from repro.data.pipeline import batch_iterator
 
 __all__ = ["dirichlet_partition", "domain_shift_partition",
+           "shard_partition", "quantity_skew_partition",
+           "mixed_skew_partition", "feature_shift_partition",
+           "severity_ladder", "train_val_split", "apply_domain",
            "SyntheticImageDataset", "SyntheticTextDataset",
            "make_image_dataset", "make_domain_datasets", "make_lm_dataset",
            "batch_iterator"]

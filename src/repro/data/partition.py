@@ -1,26 +1,67 @@
-"""Non-IID client partitioners (paper §4.1).
+"""Non-IID client partitioners (paper §4.1 + the survey-driven extensions).
 
-dirichlet_partition: label-skew — per-class Dirichlet(beta) allocation over
-clients (the paper's Dir(0.5) CIFAR/Tiny-ImageNet setup).
-domain_shift_partition: one domain per client (PACS / Office-Caltech setup),
-with the paper's N>4 extension: domains are assigned round-robin in the
-given order (appendix Table 6).
+The paper's headline claims span two heterogeneity families; the one-shot
+FL surveys (arXiv:2505.02426, arXiv:2502.09104) stress several more. All
+of them live here as pure index/dataset partitioners, and each has a
+registered name in `repro.scenarios` so a `ScenarioSpec` can select it
+declaratively:
+
+dirichlet_partition:     label-skew — per-class Dirichlet(beta) allocation
+                         over clients (the paper's Dir(0.5) setup).
+shard_partition:         pathological label-skew — sort-by-label shards,
+                         k classes per client (McMahan-style).
+quantity_skew_partition: Dirichlet(beta) over per-client *sample counts*;
+                         label marginals stay ~uniform.
+mixed_skew_partition:    label × quantity skew jointly.
+domain_shift_partition:  one domain per client (PACS / Office-Caltech),
+                         round-robin for N > 4 (appendix Table 6).
+feature_shift_partition: feature-shift severity ladder — an even split of
+                         one dataset with per-client domain transforms of
+                         increasing strength.
+
+Every index partitioner returns per-client sorted index arrays forming an
+exact cover of the input (every sample assigned exactly once), enforces a
+per-client `min_size`, and is bit-deterministic in `seed` — invariants
+pinned by the property suite in tests/test_data.py.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.data.synthetic import SyntheticImageDataset
+from repro.data.synthetic import SyntheticImageDataset, apply_domain
+
+# Bounded resampling for the min_size constraint: unsatisfiable requests
+# (e.g. n_clients > n_samples) used to spin forever; now they raise.
+MAX_RETRIES = 100
+
+
+def _check_feasible(n_samples: int, n_clients: int, min_size: int,
+                    what: str) -> None:
+    if n_clients < 1:
+        raise ValueError(f"{what}: n_clients must be >= 1, got {n_clients}")
+    if n_clients * min_size > n_samples:
+        raise ValueError(
+            f"{what}: min_size={min_size} is unsatisfiable — "
+            f"{n_clients} clients need at least {n_clients * min_size} "
+            f"samples, got {n_samples}")
+
+
+def _retries_exhausted(what: str, min_size: int) -> ValueError:
+    return ValueError(
+        f"{what}: could not satisfy min_size={min_size} after "
+        f"{MAX_RETRIES} resampling attempts; lower min_size, raise beta, "
+        f"or reduce n_clients")
 
 
 def dirichlet_partition(labels: np.ndarray, n_clients: int, beta: float,
                         seed: int = 0, min_size: int = 2) -> List[np.ndarray]:
     """Returns per-client index arrays; every sample assigned exactly once."""
-    rng = np.random.default_rng(seed)
+    _check_feasible(len(labels), n_clients, min_size, "dirichlet_partition")
     n_classes = int(labels.max()) + 1
-    while True:
+    for attempt in range(MAX_RETRIES):
+        rng = np.random.default_rng(seed + attempt)
         idx_per_client = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx_c = np.where(labels == c)[0]
@@ -33,8 +74,91 @@ def dirichlet_partition(labels: np.ndarray, n_clients: int, beta: float,
                  for p in idx_per_client]
         if min(len(p) for p in parts) >= min_size:
             return [np.sort(p) for p in parts]
-        seed += 1
-        rng = np.random.default_rng(seed)
+    raise _retries_exhausted("dirichlet_partition", min_size)
+
+
+def shard_partition(labels: np.ndarray, n_clients: int,
+                    classes_per_client: int = 2,
+                    seed: int = 0, min_size: int = 1) -> List[np.ndarray]:
+    """Pathological label skew (the FedAvg paper's split): sort indices by
+    label, cut into ``n_clients * classes_per_client`` contiguous shards,
+    deal each client `classes_per_client` shards at random — so each
+    client sees at most ~`classes_per_client` classes."""
+    n = len(labels)
+    n_shards = n_clients * classes_per_client
+    if n_shards > n:
+        raise ValueError(
+            f"shard_partition: {n_shards} shards "
+            f"({n_clients} clients × {classes_per_client} classes) is "
+            f"unsatisfiable with {n} samples")
+    _check_feasible(n, n_clients, min_size, "shard_partition")
+    rng = np.random.default_rng(seed)
+    # stable sort keeps equal-label runs deterministic; jitter within a
+    # class comes from a pre-permutation
+    pre = rng.permutation(n)
+    by_label = pre[np.argsort(labels[pre], kind="stable")]
+    shards = np.array_split(by_label, n_shards)
+    shard_order = rng.permutation(n_shards)
+    parts = [np.sort(np.concatenate(
+                [shards[s] for s in shard_order[i * classes_per_client:
+                                                (i + 1) * classes_per_client]]
+             ).astype(np.int64))
+             for i in range(n_clients)]
+    if min(len(p) for p in parts) < min_size:
+        # deterministic given (n, n_shards): no amount of resampling helps
+        raise ValueError(
+            f"shard_partition: min_size={min_size} is unsatisfiable with "
+            f"{n_shards} shards over {n} samples; lower min_size or "
+            f"classes_per_client")
+    return parts
+
+
+def quantity_skew_partition(labels: np.ndarray, n_clients: int,
+                            beta: float = 0.5, seed: int = 0,
+                            min_size: int = 2) -> List[np.ndarray]:
+    """Quantity skew: per-client dataset *sizes* follow Dirichlet(beta)
+    while label marginals stay ~uniform (samples are dealt from one global
+    shuffle). The survey's 'how much data' axis, orthogonal to label skew."""
+    n = len(labels)
+    _check_feasible(n, n_clients, min_size, "quantity_skew_partition")
+    for attempt in range(MAX_RETRIES):
+        rng = np.random.default_rng(seed + attempt)
+        perm = rng.permutation(n)
+        props = rng.dirichlet(np.full(n_clients, beta))
+        cuts = (np.cumsum(props) * n).astype(int)[:-1]
+        parts = np.split(perm, cuts)
+        if min(len(p) for p in parts) >= min_size:
+            return [np.sort(p.astype(np.int64)) for p in parts]
+    raise _retries_exhausted("quantity_skew_partition", min_size)
+
+
+def mixed_skew_partition(labels: np.ndarray, n_clients: int,
+                         beta_label: float = 0.3, beta_quantity: float = 0.5,
+                         seed: int = 0, min_size: int = 2) -> List[np.ndarray]:
+    """Label × quantity skew jointly: per-class Dirichlet(beta_label)
+    proportions are re-weighted by a per-client Dirichlet(beta_quantity)
+    size budget, so clients differ in both label marginal and sample
+    count (NIID-bench's hardest tabulated regime)."""
+    n = len(labels)
+    _check_feasible(n, n_clients, min_size, "mixed_skew_partition")
+    n_classes = int(labels.max()) + 1
+    for attempt in range(MAX_RETRIES):
+        rng = np.random.default_rng(seed + attempt)
+        budget = rng.dirichlet(np.full(n_clients, beta_quantity))
+        idx_per_client = [[] for _ in range(n_clients)]
+        for c in range(n_classes):
+            idx_c = np.where(labels == c)[0]
+            rng.shuffle(idx_c)
+            props = rng.dirichlet(np.full(n_clients, beta_label)) * budget
+            props = props / props.sum()
+            cuts = (np.cumsum(props) * len(idx_c)).astype(int)[:-1]
+            for i, part in enumerate(np.split(idx_c, cuts)):
+                idx_per_client[i].append(part)
+        parts = [np.concatenate(p) if p else np.empty(0, np.int64)
+                 for p in idx_per_client]
+        if min(len(p) for p in parts) >= min_size:
+            return [np.sort(p) for p in parts]
+    raise _retries_exhausted("mixed_skew_partition", min_size)
 
 
 def domain_shift_partition(domains: Dict[str, SyntheticImageDataset],
@@ -42,7 +166,8 @@ def domain_shift_partition(domains: Dict[str, SyntheticImageDataset],
                            order: Sequence[str] = ("photo", "art", "cartoon",
                                                    "sketch"),
                            seed: int = 0) -> List[SyntheticImageDataset]:
-    """One (sub-)domain per client, round-robin in `order` (paper Table 6)."""
+    """One (sub-)domain per client, round-robin in `order` (paper Table 6).
+    Within a domain the split is disjoint (a permutation split)."""
     rng = np.random.default_rng(seed)
     n_dom = len(order)
     reps = [order[i % n_dom] for i in range(n_clients)]
@@ -60,6 +185,48 @@ def domain_shift_partition(domains: Dict[str, SyntheticImageDataset],
         ds = domains[d]
         out.append(SyntheticImageDataset(ds.images[idx], ds.labels[idx],
                                          ds.n_classes))
+    return out
+
+
+def severity_ladder(n_clients: int, max_severity: float = 1.0,
+                    ) -> List[float]:
+    """Per-client transform strengths, ramping 0 → max_severity linearly
+    (client 0 keeps the source distribution; the last client sees the
+    full shift)."""
+    if n_clients == 1:
+        return [max_severity]
+    return [max_severity * i / (n_clients - 1) for i in range(n_clients)]
+
+
+def feature_shift_partition(dataset: SyntheticImageDataset, n_clients: int,
+                            max_severity: float = 1.0,
+                            domains: Sequence[str] = ("art", "cartoon",
+                                                      "sketch"),
+                            seed: int = 0,
+                            severities: Optional[Sequence[float]] = None,
+                            ) -> List[SyntheticImageDataset]:
+    """Feature-shift severity ladder: split one dataset evenly (disjoint
+    permutation split), then apply a domain transform of per-client
+    strength — client i gets domain ``domains[i % len(domains)]`` at
+    severity ``severities[i]`` (default: a linear 0 → max_severity ramp).
+    Parameterizing *severity* turns the binary PACS-style shift into a
+    dial the scenario grid can sweep."""
+    rng = np.random.default_rng(seed)
+    n = len(dataset.labels)
+    _check_feasible(n, n_clients, 1, "feature_shift_partition")
+    sev = (list(severities) if severities is not None
+           else severity_ladder(n_clients, max_severity))
+    if len(sev) != n_clients:
+        raise ValueError(f"severities has {len(sev)} entries for "
+                         f"{n_clients} clients")
+    parts = np.array_split(rng.permutation(n), n_clients)
+    out = []
+    for i, p in enumerate(parts):
+        imgs = apply_domain(dataset.images[p], domains[i % len(domains)],
+                            severity=sev[i])
+        out.append(SyntheticImageDataset(imgs.astype(np.float32),
+                                         dataset.labels[p],
+                                         dataset.n_classes))
     return out
 
 

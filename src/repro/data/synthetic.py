@@ -58,10 +58,7 @@ def make_image_dataset(n_samples=20000, n_classes=10, side=32, noise=1.0,
 _DOMAIN_TRANSFORMS = ("photo", "art", "cartoon", "sketch")
 
 
-def _apply_domain(images: np.ndarray, domain: str) -> np.ndarray:
-    """Feature shifts strong enough to separate domains but mild enough
-    that cross-domain transfer is learnable (mirrors PACS, where a model
-    trained on photos still gets ~40% on sketches)."""
+def _full_domain_transform(images: np.ndarray, domain: str) -> np.ndarray:
     if domain == "photo":
         return images
     if domain == "art":                      # partial channel rotation + tint
@@ -72,6 +69,23 @@ def _apply_domain(images: np.ndarray, domain: str) -> np.ndarray:
         g = images.mean(-1, keepdims=True)
         return 0.4 * images + 0.6 * np.repeat(g, 3, axis=-1)
     raise ValueError(domain)
+
+
+def apply_domain(images: np.ndarray, domain: str,
+                 severity: float = 1.0) -> np.ndarray:
+    """Feature shifts strong enough to separate domains but mild enough
+    that cross-domain transfer is learnable (mirrors PACS, where a model
+    trained on photos still gets ~40% on sketches). `severity` blends
+    between the source distribution (0.0) and the full transform (1.0) —
+    the dial `feature_shift_partition`'s severity ladder sweeps. The
+    severity-0.0 rung returns the source images bitwise-unchanged (the
+    ladder's client 0 stays on the source distribution exactly)."""
+    if severity == 0.0:
+        return images
+    shifted = _full_domain_transform(images, domain)
+    if severity == 1.0:
+        return shifted
+    return (1.0 - severity) * images + severity * shifted
 
 
 def make_domain_datasets(n_per_domain=4000, n_classes=10, side=32, noise=0.8,
@@ -85,7 +99,7 @@ def make_domain_datasets(n_per_domain=4000, n_classes=10, side=32, noise=0.8,
         imgs = means[labels] + noise * rng.normal(
             size=(n_per_domain, side, side, 3)).astype(np.float32)
         out[d] = SyntheticImageDataset(
-            _apply_domain(imgs, d).astype(np.float32), labels, n_classes)
+            apply_domain(imgs, d).astype(np.float32), labels, n_classes)
     return out
 
 

@@ -1,0 +1,31 @@
+"""`repro.scenarios` — declarative non-IID scenarios (DESIGN.md §7).
+
+A `ScenarioSpec` describes one heterogeneity setup as data (family,
+partitioner + params, client population, dropout/straggler schedule,
+eval-split policy); the registry mirrors the strategy registry; and
+`build_experiments` compiles a spec into `run_batch`-ready Experiments —
+one compiled group per strategy.
+
+    from repro.scenarios import get_scenario, run_scenario
+
+    spec = get_scenario("quantity_skew").replace(n_samples=1500)
+    batch = run_scenario(spec, model, fed=fed,
+                         strategies=("fedelmy", "fedseq"), seeds=(0, 1))
+"""
+from repro.scenarios.compile import (ScenarioData, accuracy_eval,
+                                     build_experiments, materialize,
+                                     run_scenario)
+from repro.scenarios.registry import (PARTITIONERS, SCENARIOS,
+                                      PartitionerSpec, get_partitioner,
+                                      get_scenario, list_partitioners,
+                                      list_scenarios, register_partitioner,
+                                      register_scenario)
+from repro.scenarios.spec import EVAL_SPLITS, FAMILIES, ScenarioSpec
+
+__all__ = [
+    "ScenarioSpec", "ScenarioData", "FAMILIES", "EVAL_SPLITS",
+    "register_scenario", "get_scenario", "list_scenarios", "SCENARIOS",
+    "register_partitioner", "get_partitioner", "list_partitioners",
+    "PARTITIONERS", "PartitionerSpec",
+    "materialize", "build_experiments", "run_scenario", "accuracy_eval",
+]

@@ -1,0 +1,208 @@
+"""The scenario compiler: `ScenarioSpec` → materialized client data →
+`run_batch`-ready Experiments.
+
+    spec = get_scenario("pathological_shards")
+    exps = build_experiments(spec, model, strategies=("fedelmy", "fedseq"),
+                             seeds=(0, 1), fed=fed)
+    batch = api.run_batch(experiments=exps)   # one compiled group/strategy
+
+`materialize(spec, seed)` draws the synthetic dataset, runs the
+registered partitioner, applies the population knobs (participation,
+dropout, stragglers), and resolves the eval-split policy. It returns
+plain numpy client arrays; `ScenarioData.iterators()` mints *fresh*
+stateful batch iterators per call, which is what lets one materialized
+scenario feed many experiments without tripping `run_batch`'s
+shared-iterator rejection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.batch import run_batch
+from repro.api.engine import Experiment
+from repro.configs.base import FedConfig
+from repro.data.partition import train_val_split
+from repro.data.pipeline import batch_iterator, image_batch
+from repro.data.synthetic import (SyntheticImageDataset, make_domain_datasets,
+                                  make_image_dataset)
+from repro.scenarios.registry import get_partitioner
+from repro.scenarios.spec import ScenarioSpec
+
+Arrays = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass
+class ScenarioData:
+    """One seed's materialization of a spec: per-active-client arrays plus
+    the evaluation set."""
+    spec: ScenarioSpec
+    seed: int
+    client_ids: List[int]            # original client indices (post
+                                     # participation/dropout selection)
+    client_data: List[Arrays]        # {"images", "labels"} per client
+    client_val: List[Optional[Arrays]]   # val_frac carves (None if 0)
+    eval_data: Arrays
+    n_classes: int
+
+    def iterators(self, base_seed: Optional[int] = None) -> List[Any]:
+        """Fresh per-client infinite batch iterators. Call once per
+        experiment — streams are stateful and must not be shared across
+        runs of a batch. Clients smaller than `batch_size` (quantity
+        skew, stragglers) are deterministically tiled up to one full
+        batch: the batch *shape* must be a pure function of the spec, or
+        a sweep's runs could not stack into one compiled group."""
+        base = self.seed if base_seed is None else base_seed
+        its = []
+        for i, c in enumerate(self.client_data):
+            n = len(c["labels"])
+            bs = self.spec.batch_size
+            if n < bs:
+                idx = np.tile(np.arange(n), -(-bs // n))[:bs]
+                c = {k: v[idx] for k, v in c.items()}
+            its.append(batch_iterator(c, bs, seed=base * 100 + i))
+        return its
+
+    def eval_dataset(self) -> SyntheticImageDataset:
+        return SyntheticImageDataset(self.eval_data["images"],
+                                     self.eval_data["labels"],
+                                     self.n_classes)
+
+    def sizes(self) -> List[int]:
+        return [len(c["labels"]) for c in self.client_data]
+
+
+def _index_family_clients(spec: ScenarioSpec, seed: int, fn: Callable):
+    """Index partitioners run over one flat dataset; "holdout" eval carves
+    the test split before partitioning."""
+    ds = make_image_dataset(spec.n_samples, spec.n_classes, spec.side,
+                            spec.noise, seed=seed)
+    if spec.eval_split == "holdout":
+        train_idx, hold_idx = train_val_split(len(ds.labels),
+                                              spec.holdout_frac,
+                                              seed=seed + 13)
+        eval_arr = image_batch(ds, np.sort(hold_idx))
+        train_idx = np.sort(train_idx)
+        images, labels = ds.images[train_idx], ds.labels[train_idx]
+    else:
+        test = make_image_dataset(spec.n_test, spec.n_classes, spec.side,
+                                  spec.noise, seed=seed + 91)
+        eval_arr = image_batch(test)
+        images, labels = ds.images, ds.labels
+    parts = fn(labels, spec.n_clients, seed=seed, **spec.partitioner_params)
+    clients = [{"images": images[p], "labels": labels[p]} for p in parts]
+    return clients, eval_arr
+
+
+def _dataset_family_clients(spec: ScenarioSpec, seed: int, fn: Callable):
+    """Dataset partitioners (domain_shift / feature_shift) build their own
+    per-client datasets; the global eval set spans every domain/severity
+    rung so the metric measures cross-shift transfer."""
+    if spec.eval_split != "global":
+        raise ValueError(
+            f"scenario {spec.name!r}: eval_split='holdout' requires an "
+            f"index partitioner; {spec.family} produces per-client "
+            "datasets — use eval_split='global'")
+    if spec.family == "domain_shift":
+        doms = make_domain_datasets(spec.n_samples // 4, spec.n_classes,
+                                    spec.side, spec.noise, seed=seed)
+        clients = fn(doms, spec.n_clients, seed=seed,
+                     **spec.partitioner_params)
+        test = make_domain_datasets(max(1, spec.n_test // 4), spec.n_classes,
+                                    spec.side, spec.noise, seed=seed + 91)
+        eval_sets = list(test.values())
+    else:                            # feature_shift ladder
+        base = make_image_dataset(spec.n_samples, spec.n_classes, spec.side,
+                                  spec.noise, seed=seed)
+        clients = fn(base, spec.n_clients, seed=seed,
+                     **spec.partitioner_params)
+        test_base = make_image_dataset(spec.n_test, spec.n_classes,
+                                       spec.side, spec.noise, seed=seed + 91)
+        eval_sets = fn(test_base, spec.n_clients, seed=seed + 91,
+                       **spec.partitioner_params)
+    eval_arr = {"images": np.concatenate([d.images for d in eval_sets]),
+                "labels": np.concatenate([d.labels for d in eval_sets])}
+    return [image_batch(c) for c in clients], eval_arr
+
+
+def materialize(spec: ScenarioSpec, seed: int = 0) -> ScenarioData:
+    """Draw the scenario's dataset, partition it, and apply the population
+    knobs. Deterministic in (spec, seed)."""
+    pspec = get_partitioner(spec.partitioner)
+    if pspec.kind == "indices":
+        clients, eval_arr = _index_family_clients(spec, seed, pspec.fn)
+    else:
+        clients, eval_arr = _dataset_family_clients(spec, seed, pspec.fn)
+
+    active = spec.active_clients(seed)
+    client_data, client_val = [], []
+    for c in active:
+        arr = clients[c]
+        if c in set(spec.stragglers) and spec.straggler_keep < 1.0:
+            n = len(arr["labels"])
+            keep = max(1, int(round(spec.straggler_keep * n)))
+            idx = np.sort(np.random.default_rng(seed + 17 + c).choice(
+                n, size=keep, replace=False))
+            arr = {k: v[idx] for k, v in arr.items()}
+        if spec.val_frac > 0.0:
+            tr, va = train_val_split(len(arr["labels"]), spec.val_frac,
+                                     seed=seed * 1000 + c)
+            client_val.append({k: v[va] for k, v in arr.items()})
+            arr = {k: v[tr] for k, v in arr.items()}
+        else:
+            client_val.append(None)
+        client_data.append(arr)
+    return ScenarioData(spec=spec, seed=seed, client_ids=active,
+                        client_data=client_data, client_val=client_val,
+                        eval_data=eval_arr, n_classes=spec.n_classes)
+
+
+def accuracy_eval(model, data: ScenarioData) -> Callable:
+    """Default eval_fn: full-batch argmax accuracy over the scenario's
+    eval split (scenario-grid test sets are small; benchmarks that need
+    bounded-memory eval keep their own scanned variant)."""
+    imgs = jnp.asarray(data.eval_data["images"])
+    labels = jnp.asarray(data.eval_data["labels"])
+
+    @jax.jit
+    def acc(params):
+        logits = model.forward(params, {"images": imgs})
+        return jnp.mean(jnp.argmax(logits, -1) == labels)
+    return acc
+
+
+def build_experiments(spec: ScenarioSpec, model, *,
+                      fed: FedConfig,
+                      strategies: Sequence[str] = ("fedelmy",),
+                      seeds: Sequence[int] = (0,),
+                      eval_builder: Optional[Callable] = None,
+                      strategy_options: Optional[Dict[str, Dict]] = None,
+                      ) -> List[Experiment]:
+    """Compile a scenario sweep into Experiments: one per (strategy, seed),
+    sharing one materialization per seed but minting fresh iterators per
+    experiment. All seeds of a strategy share the static FedConfig, so
+    `run_batch` compiles each strategy's sweep as ONE group (per-strategy
+    `strategy_options` keep the grouping — they're part of the key)."""
+    fed = dataclasses.replace(fed, n_clients=spec.n_active)
+    build_eval = eval_builder if eval_builder is not None else accuracy_eval
+    datas = {seed: materialize(spec, seed) for seed in seeds}
+    evals = {seed: build_eval(model, datas[seed]) for seed in seeds}
+    opts = strategy_options or {}
+    return [Experiment(model=model, client_iters=datas[seed].iterators(),
+                       fed=fed, strategy=strategy,
+                       key=jax.random.PRNGKey(seed), eval_fn=evals[seed],
+                       strategy_options=dict(opts.get(strategy, {})))
+            for strategy in strategies for seed in seeds]
+
+
+def run_scenario(spec: ScenarioSpec, model, *, fed: FedConfig,
+                 strategies: Sequence[str] = ("fedelmy",),
+                 seeds: Sequence[int] = (0,), mesh=None, **kw):
+    """Compile and execute a scenario sweep through `api.run_batch`."""
+    exps = build_experiments(spec, model, fed=fed, strategies=strategies,
+                             seeds=seeds, **kw)
+    return run_batch(experiments=exps, mesh=mesh)

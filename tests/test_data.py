@@ -7,10 +7,43 @@ try:
 except ImportError:            # clean env: deterministic example sweep
     from _hypothesis_compat import given, settings, st
 
-from repro.data import (batch_iterator, dirichlet_partition,
-                        domain_shift_partition, make_domain_datasets,
-                        make_image_dataset, make_lm_dataset)
+from repro.data import (apply_domain, batch_iterator, dirichlet_partition,
+                        domain_shift_partition, feature_shift_partition,
+                        make_domain_datasets, make_image_dataset,
+                        make_lm_dataset, mixed_skew_partition,
+                        quantity_skew_partition, severity_ladder,
+                        shard_partition)
+from repro.data import partition as partition_mod
 from repro.data.partition import train_val_split
+
+
+def _labels(seed, n=500, n_classes=10):
+    return np.random.default_rng(seed).integers(0, n_classes, size=n)
+
+
+def _assert_exact_cover(parts, n):
+    """Every sample assigned exactly once, per-client indices sorted."""
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n                   # disjoint + total
+    for p in parts:
+        assert p.dtype == np.int64
+        assert np.array_equal(p, np.sort(p))
+
+
+# name → partitioner called with its scenario-default parameters; the
+# shared property suite below runs every index partitioner through the
+# exact-cover / min_size / equal-seed-bit-identity invariants.
+INDEX_PARTITIONERS = {
+    "dirichlet": lambda labels, n_clients, seed: dirichlet_partition(
+        labels, n_clients, 0.3, seed=seed),
+    "shards": lambda labels, n_clients, seed: shard_partition(
+        labels, n_clients, classes_per_client=2, seed=seed),
+    "quantity": lambda labels, n_clients, seed: quantity_skew_partition(
+        labels, n_clients, beta=0.5, seed=seed),
+    "mixed": lambda labels, n_clients, seed: mixed_skew_partition(
+        labels, n_clients, beta_label=0.3, beta_quantity=0.5, seed=seed),
+}
 
 
 @given(n_clients=st.integers(2, 12), beta=st.sampled_from([0.1, 0.3, 0.5, 5.0]),
@@ -33,6 +66,131 @@ def test_dirichlet_low_beta_is_skewed():
                       for p in parts])
     assert dists.max(0).min() > 2 * dists.min(0).max() or \
         dists.std(0).mean() > 0.05
+
+
+@given(n_clients=st.integers(2, 10), seed=st.integers(0, 6),
+       name=st.sampled_from(sorted(INDEX_PARTITIONERS)))
+@settings(max_examples=16, deadline=None)
+def test_index_partitioners_are_exact_covers(n_clients, seed, name):
+    labels = _labels(seed)
+    parts = INDEX_PARTITIONERS[name](labels, n_clients, seed)
+    assert len(parts) == n_clients
+    _assert_exact_cover(parts, len(labels))
+
+
+@given(n_clients=st.integers(2, 8), seed=st.integers(0, 6),
+       name=st.sampled_from(sorted(INDEX_PARTITIONERS)))
+@settings(max_examples=16, deadline=None)
+def test_index_partitioners_bit_identical_for_equal_seeds(n_clients, seed,
+                                                          name):
+    labels = _labels(seed)
+    a = INDEX_PARTITIONERS[name](labels, n_clients, seed)
+    b = INDEX_PARTITIONERS[name](labels, n_clients, seed)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+
+
+@given(n_clients=st.integers(2, 6), seed=st.integers(0, 6))
+@settings(max_examples=10, deadline=None)
+def test_min_size_is_enforced(n_clients, seed):
+    labels = _labels(seed)
+    for parts in (dirichlet_partition(labels, n_clients, 0.3, seed=seed,
+                                      min_size=5),
+                  quantity_skew_partition(labels, n_clients, beta=0.5,
+                                          seed=seed, min_size=5),
+                  mixed_skew_partition(labels, n_clients, seed=seed,
+                                       min_size=5)):
+        assert min(len(p) for p in parts) >= 5
+
+
+def test_unsatisfiable_min_size_raises():
+    """The bugfix: an infeasible min_size used to retry forever; now every
+    partitioner raises a clear ValueError (both the arithmetic precheck
+    and the bounded-retry exit)."""
+    few = _labels(0, n=5)
+    for fn in (lambda: dirichlet_partition(few, 10, 0.5),
+               lambda: quantity_skew_partition(few, 10),
+               lambda: mixed_skew_partition(few, 10),
+               lambda: shard_partition(few, 10, classes_per_client=2)):
+        with pytest.raises(ValueError, match="unsatisfiable"):
+            fn()
+
+
+def test_retry_bound_raises_not_spins(monkeypatch):
+    """A feasible-in-principle but never-sampled min_size exits after
+    MAX_RETRIES with the actionable message, instead of looping forever."""
+    monkeypatch.setattr(partition_mod, "MAX_RETRIES", 2)
+    labels = _labels(0, n=8, n_classes=2)
+    with pytest.raises(ValueError, match="resampling attempts"):
+        dirichlet_partition(labels, 4, 0.05, seed=0, min_size=2)
+
+
+def test_shard_partition_is_pathological():
+    """Balanced labels, shard size == class size: every client sees at
+    most `classes_per_client` distinct classes (McMahan's split)."""
+    labels = np.arange(500) % 10                  # exactly 50 per class
+    parts = shard_partition(labels, 5, classes_per_client=2, seed=0)
+    _assert_exact_cover(parts, 500)
+    for p in parts:
+        assert len(np.unique(labels[p])) <= 2
+
+
+def test_quantity_skew_sizes_skew_but_labels_stay_uniform():
+    labels = _labels(0, n=4000)
+    parts = quantity_skew_partition(labels, 5, beta=0.3, seed=1)
+    sizes = np.array([len(p) for p in parts])
+    assert sizes.max() > 2 * sizes.min()          # quantity skew present
+    dists = np.stack([np.bincount(labels[p], minlength=10) / len(p)
+                      for p in parts if len(p) >= 100])
+    assert dists.std(0).mean() < 0.05             # label marginals ~uniform
+
+
+def test_mixed_skew_skews_both_axes():
+    labels = _labels(0, n=8000)
+    parts = mixed_skew_partition(labels, 8, beta_label=0.2,
+                                 beta_quantity=0.3, seed=0)
+    sizes = np.array([len(p) for p in parts])
+    assert sizes.max() > 2 * sizes.min()          # quantity axis
+    dists = np.stack([np.bincount(labels[p], minlength=10) / len(p)
+                      for p in parts])
+    assert dists.std(0).mean() > 0.05             # label axis
+
+
+def test_feature_shift_ladder_preserves_labels_and_ramps_severity():
+    ds = make_image_dataset(400, seed=0)
+    clients = feature_shift_partition(ds, 4, max_severity=1.0, seed=0)
+    assert sum(len(c.labels) for c in clients) == 400
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate([c.labels for c in clients])),
+        np.sort(ds.labels))
+    assert severity_ladder(4) == [0.0, 1 / 3, 2 / 3, 1.0]
+    # client 0 is untransformed source data: every row exists in ds
+    src = {r.tobytes() for r in ds.images}
+    assert all(r.tobytes() in src for r in clients[0].images)
+    # later rungs are genuinely shifted
+    assert not any(r.tobytes() in src for r in clients[-1].images)
+
+
+def test_apply_domain_severity_blends():
+    imgs = make_image_dataset(16, seed=0).images
+    np.testing.assert_array_equal(apply_domain(imgs, "sketch", 0.0), imgs)
+    full = apply_domain(imgs, "sketch", 1.0)
+    np.testing.assert_allclose(apply_domain(imgs, "sketch", 0.5),
+                               0.5 * imgs + 0.5 * full, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 8))
+@settings(max_examples=9, deadline=None)
+def test_domain_round_robin_is_disjoint_within_domains(seed):
+    """Clients sharing a domain must receive disjoint sample sets (the
+    round-robin split is a permutation split)."""
+    doms = make_domain_datasets(n_per_domain=60, seed=seed)
+    clients = domain_shift_partition(doms, 8, seed=seed)
+    for d in range(4):                  # clients d and d+4 share domain d
+        a, b = clients[d], clients[d + 4]
+        assert len(a.labels) + len(b.labels) == 60
+        rows = {r.tobytes() for r in a.images}
+        assert not any(r.tobytes() in rows for r in b.images)
 
 
 def test_domain_shift_partition_round_robin():

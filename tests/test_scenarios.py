@@ -1,0 +1,250 @@
+"""Tests for `repro.scenarios`: spec validation, registry round-trips,
+materialization invariants, compilation to run_batch groups, and the
+scenario × strategy registry-drift smoke."""
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # clean env: deterministic example sweep
+    from _hypothesis_compat import given, settings, st
+
+from repro.api import list_strategies, run_batch
+from repro.configs import FedConfig
+from repro.scenarios import (FAMILIES, ScenarioSpec, build_experiments,
+                             get_partitioner, get_scenario, list_partitioners,
+                             list_scenarios, materialize, run_scenario)
+
+KEY = jax.random.PRNGKey(0)
+SIDE = 8
+
+# Tiny spec scale shared across tests: partitioners and the engine see the
+# same shapes they would at paper scale, in milliseconds.
+TINY = dict(n_samples=200, n_test=48, side=SIDE, batch_size=8)
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _tiny_image_model(side=SIDE):
+    dim = side * side * 3
+
+    def init(key):
+        return {"w": 0.02 * jax.random.normal(key, (dim, 10)),
+                "b": jnp.zeros((10,))}
+
+    def forward(params, batch):
+        x = batch["images"].astype(jnp.float32)
+        return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(
+            logits, batch["labels"][:, None].astype(jnp.int32), -1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return TinyModel(init, loss_fn, forward)
+
+
+MODEL = _tiny_image_model()
+FED = FedConfig(n_clients=4, pool_size=1, e_local=2, e_warmup=1,
+                learning_rate=1e-2)
+
+
+def _tiny(name, **overrides):
+    return get_scenario(name).replace(**{**TINY, **overrides})
+
+
+# ---------------------------------------------------------------------------
+# Spec validation + registry round-trips
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_roundtrip():
+    expected = {"dir_label_skew", "domain_shift", "pathological_shards",
+                "quantity_skew", "mixed_skew", "feature_shift_ladder",
+                "partial_participation", "stragglers"}
+    assert expected <= set(list_scenarios())
+    for name in list_scenarios():
+        spec = get_scenario(name)
+        assert spec.name == name
+        assert spec.family in FAMILIES
+        assert get_partitioner(spec.partitioner).kind in ("indices",
+                                                          "datasets")
+    with pytest.raises(ValueError, match="dir_label_skew"):
+        get_scenario("no_such_scenario")
+
+
+def test_partitioner_registry_roundtrip():
+    expected = {"dirichlet", "shards", "quantity", "mixed", "domain_robin",
+                "feature_ladder"}
+    assert expected <= set(list_partitioners())
+    with pytest.raises(ValueError, match="dirichlet"):
+        get_partitioner("no_such_partitioner")
+
+
+def test_spec_validation():
+    ok = dict(name="x", family="label_skew", partitioner="dirichlet")
+    ScenarioSpec(**ok)
+    with pytest.raises(ValueError, match="family"):
+        ScenarioSpec(**{**ok, "family": "temporal_skew"})
+    with pytest.raises(ValueError, match="participation"):
+        ScenarioSpec(**ok, participation=0.0)
+    with pytest.raises(ValueError, match="eval_split"):
+        ScenarioSpec(**ok, eval_split="per_client")
+    with pytest.raises(ValueError, match="out of range"):
+        ScenarioSpec(**ok, n_clients=4, dropout=(4,))
+    with pytest.raises(ValueError, match="every client"):
+        ScenarioSpec(**ok, n_clients=2, dropout=(0, 1))
+    with pytest.raises(ValueError, match="straggler_keep"):
+        ScenarioSpec(**ok, straggler_keep=0.0)
+
+
+def test_holdout_requires_index_partitioner():
+    spec = _tiny("feature_shift_ladder", eval_split="holdout")
+    with pytest.raises(ValueError, match="holdout"):
+        materialize(spec, 0)
+
+
+# ---------------------------------------------------------------------------
+# Materialization invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 5))
+@settings(max_examples=6, deadline=None)
+def test_materialize_is_deterministic_per_seed(seed):
+    for name in ("dir_label_skew", "quantity_skew", "feature_shift_ladder"):
+        a = materialize(_tiny(name), seed)
+        b = materialize(_tiny(name), seed)
+        assert a.client_ids == b.client_ids
+        for ca, cb in zip(a.client_data, b.client_data):
+            np.testing.assert_array_equal(ca["images"], cb["images"])
+            np.testing.assert_array_equal(ca["labels"], cb["labels"])
+        np.testing.assert_array_equal(a.eval_data["labels"],
+                                      b.eval_data["labels"])
+
+
+def test_participation_and_dropout_shrink_population():
+    spec = _tiny("partial_participation")
+    assert spec.n_clients == 6 and spec.dropout == (5,)
+    data = materialize(spec, 0)
+    assert len(data.client_data) == spec.n_active < spec.n_clients
+    assert 5 not in data.client_ids
+    # the active count is seed-independent (grouping requirement) …
+    assert all(len(materialize(spec, s).client_ids) == spec.n_active
+               for s in range(3))
+    # … but the seeded *selection* varies
+    picks = {tuple(materialize(spec, s).client_ids) for s in range(6)}
+    assert len(picks) > 1
+
+
+def test_stragglers_are_subsampled():
+    spec = _tiny("stragglers")
+    full = materialize(spec.replace(stragglers=()), 0)
+    lame = materialize(spec, 0)
+    for c, (f, s) in enumerate(zip(full.client_data, lame.client_data)):
+        expect = (max(1, int(round(spec.straggler_keep * len(f["labels"]))))
+                  if c in spec.stragglers else len(f["labels"]))
+        assert len(s["labels"]) == expect
+
+
+def test_holdout_eval_is_disjoint_from_training():
+    spec = _tiny("dir_label_skew", eval_split="holdout", holdout_frac=0.25)
+    data = materialize(spec, 3)
+    n_hold = len(data.eval_data["labels"])
+    assert n_hold == int(spec.n_samples * 0.25)
+    assert sum(data.sizes()) == spec.n_samples - n_hold
+
+
+def test_val_frac_carves_per_client_split():
+    spec = _tiny("dir_label_skew", val_frac=0.2)
+    base = materialize(spec.replace(val_frac=0.0), 0)
+    data = materialize(spec, 0)
+    for full, tr, va in zip(base.client_data, data.client_data,
+                            data.client_val):
+        assert va is not None
+        assert len(tr["labels"]) + len(va["labels"]) == len(full["labels"])
+
+
+def test_small_clients_tile_to_full_batches():
+    """Quantity skew can leave a client below batch_size; the iterator
+    must still emit full-shape batches (the run_batch grouping contract)."""
+    spec = _tiny("quantity_skew", batch_size=32,
+                 partitioner_params={"beta": 0.3, "min_size": 2})
+    data = materialize(spec, 1)
+    assert min(data.sizes()) < 32          # the regime under test
+    for it in data.iterators():
+        assert next(it)["images"].shape[0] == 32
+
+
+def test_iterators_are_fresh_and_reproducible():
+    data = materialize(_tiny("dir_label_skew"), 0)
+    a, b = data.iterators(), data.iterators()
+    assert all(x is not y for x, y in zip(a, b))
+    np.testing.assert_array_equal(np.asarray(next(a[0])["labels"]),
+                                  np.asarray(next(b[0])["labels"]))
+
+
+# ---------------------------------------------------------------------------
+# Compilation: spec → Experiments → run_batch groups
+# ---------------------------------------------------------------------------
+
+def test_build_experiments_one_group_per_strategy():
+    spec = _tiny("pathological_shards")
+    exps = build_experiments(spec, MODEL, fed=FED,
+                             strategies=("fedelmy", "fedseq"), seeds=(0, 1))
+    assert len(exps) == 4
+    assert [e.strategy for e in exps] == ["fedelmy"] * 2 + ["fedseq"] * 2
+    assert all(e.fed.n_clients == spec.n_active for e in exps)
+    batch = run_batch(experiments=exps)
+    assert batch.n_compiled_groups == 2
+    for res in batch.runs:
+        assert np.isfinite(res.final_metric)
+
+
+def test_run_scenario_matches_sequential_run():
+    """Per-run results from a compiled scenario sweep are bit-identical to
+    sequential `api.run` on the same compiled Experiment."""
+    from repro.api import run
+    spec = _tiny("quantity_skew")
+    batch = run_scenario(spec, MODEL, fed=FED, strategies=("fedseq",),
+                         seeds=(0, 1))
+    (exp,) = build_experiments(spec, MODEL, fed=FED, strategies=("fedseq",),
+                               seeds=(1,))
+    ref = run(exp)
+    for a, b in zip(jax.tree.leaves(batch.runs[1].params),
+                    jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_per_strategy_options_thread_through():
+    spec = _tiny("dir_label_skew")
+    exps = build_experiments(spec, MODEL, fed=FED,
+                             strategies=("dfedsam", "fedseq"), seeds=(0,),
+                             strategy_options={"dfedsam": {"rho": 0.01}})
+    assert exps[0].strategy_options == {"rho": 0.01}
+    assert exps[1].strategy_options == {}
+
+
+# ---------------------------------------------------------------------------
+# Registry drift: every scenario × strategy pair survives a 1-round smoke
+# ---------------------------------------------------------------------------
+
+def test_every_scenario_x_strategy_smoke():
+    """Mirrors test_api's all-strategies smoke across the scenario axis:
+    any registered scenario must compile and run under any registered
+    strategy through `run_batch` (catches spec/partitioner/engine drift)."""
+    strategies = list_strategies()
+    for name in list_scenarios():
+        spec = _tiny(name)
+        batch = run_scenario(spec, MODEL, fed=FED,
+                             strategies=strategies, seeds=(0,))
+        assert len(batch.runs) == len(strategies), name
+        for strategy, res in zip(strategies, batch.runs):
+            assert res.strategy == strategy
+            assert np.isfinite(res.final_metric), (name, strategy)
+            assert all(bool(jnp.isfinite(x).all())
+                       for x in jax.tree.leaves(res.params)), (name, strategy)
