@@ -27,17 +27,19 @@ BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
 
 
 def _list() -> None:
-    """Enumerate registered benchmarks, strategies, pool backends,
-    scenarios, and partitioners."""
-    from repro.api import list_pool_backends, list_strategies
+    """Enumerate registered benchmarks, strategies (with their plan
+    topology/aggregation), pool backends, scenarios, and partitioners."""
+    from repro.api import describe_strategies, list_pool_backends
     from repro.scenarios import (get_scenario, list_partitioners,
                                  list_scenarios)
     print("benchmarks:")
     for name in BENCHMARKS:
         print(f"  {name}")
-    print("strategies:")
-    for name in list_strategies():
-        print(f"  {name}")
+    print("strategies (plans):")
+    for name, d in describe_strategies().items():
+        print(f"  {name} (topology={d['topology']}, "
+              f"local={d['local_block']}, aggregate={d['aggregate']}, "
+              f"broadcast={d['broadcast']}, batched={d['batched']})")
     print("pool backends:")
     for name in list_pool_backends():
         print(f"  {name}")

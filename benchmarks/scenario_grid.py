@@ -1,4 +1,4 @@
-"""Scenario grid: four heterogeneity families × three strategies, each
+"""Scenario grid: four heterogeneity families × four strategies, each
 family's sweep compiled through `api.run_batch` as one group per strategy.
 
 This is the subsystem the one-shot FL surveys (arXiv:2505.02426,
@@ -9,11 +9,15 @@ expressed as registered `ScenarioSpec`s and compiled by
 (see `common.probe_mlp_model`): the partition structure, not the
 architecture, is what varies here.
 
+`metafed` rides along since the plan IR landed: its two-pass anchored
+chain executes through the same vmapped interpreter as the others, so
+every strategy here batches — no sequential fallbacks.
+
 Claim structure validated: FedELMY's ordering advantage over FedSeq /
-DFedAvgM persists across heterogeneity families (paper §4.3 argues the
-diversity pool is partition-agnostic). The derived column reports
-`n_compiled_groups` — the acceptance gate is one compiled group per
-(family, strategy), i.e. groups == families × strategies."""
+DFedAvgM / MetaFed persists across heterogeneity families (paper §4.3
+argues the diversity pool is partition-agnostic). The derived column
+reports `n_compiled_groups` — the acceptance gate is one compiled group
+per (family, strategy), i.e. groups == families × strategies."""
 from __future__ import annotations
 
 import time
@@ -26,7 +30,7 @@ from repro.scenarios import run_scenario
 
 FAMILY_SCENARIOS = ("dir_label_skew", "pathological_shards",
                     "quantity_skew", "feature_shift_ladder")
-STRATEGIES = ("fedelmy", "fedseq", "dfedavgm")
+STRATEGIES = ("fedelmy", "fedseq", "dfedavgm", "metafed")
 SEEDS = (0, 1)
 
 
@@ -55,6 +59,11 @@ def run():
     save_result("scenario_grid", rows)
     wins = sum(r["fedelmy"] >= max(r[s] for s in STRATEGIES[1:])
                for r in rows)
+    # every (family, strategy) pair must compile to exactly one group —
+    # the plan IR leaves no sequential fallbacks in this grid
+    expected = len(FAMILY_SCENARIOS) * len(STRATEGIES)
+    assert total_groups == expected, \
+        f"expected {expected} compiled groups, got {total_groups}"
     emit_csv("scenario_grid", t0,
              f"n_scenarios={len(rows)};n_compiled_groups={total_groups};"
              f"fedelmy_wins={wins}/{len(rows)}")

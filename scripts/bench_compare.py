@@ -1,11 +1,20 @@
 #!/usr/bin/env python
-"""Perf-regression guard: diff a benchmarks.run --json report against the
-committed baseline (BENCH_baseline.json). Warn-only — CI hosts vary too
-much for a hard gate; the signal is the printed delta table plus a nonzero
-warning count in the job log.
+"""Perf-regression gate: diff a benchmarks.run --json report against the
+committed baseline (BENCH_baseline.json).
+
+Two thresholds:
+
+* ``--threshold`` (default 1.5×) — WARN when a benchmark's us_per_call
+  grows past baseline × threshold. Warn-only: CI hosts vary.
+* ``--hard-threshold`` (default 2.0×) — FAIL (exit 1) when it grows past
+  baseline × hard threshold. A >2× regression is beyond host jitter on
+  the dispatch-bound smoke benchmarks; CI treats it as a broken hot path.
+
+Missing files never fail (fresh checkouts have no report to compare).
 
   python scripts/bench_compare.py BENCH_baseline.json bench_smoke.json
-  python scripts/bench_compare.py --threshold 2.0 baseline.json new.json
+  python scripts/bench_compare.py --threshold 1.5 --hard-threshold 2.0 \\
+      baseline.json new.json
 """
 from __future__ import annotations
 
@@ -13,7 +22,8 @@ import argparse
 import json
 import sys
 
-DEFAULT_THRESHOLD = 1.5      # warn when us_per_call grows past baseline×1.5
+DEFAULT_THRESHOLD = 1.5       # warn when us_per_call grows past ×1.5
+DEFAULT_HARD_THRESHOLD = 2.0  # fail CI when it grows past ×2.0
 
 
 def load(path: str) -> dict:
@@ -22,8 +32,10 @@ def load(path: str) -> dict:
     return data.get("benchmarks", data)
 
 
-def compare(baseline: dict, new: dict, threshold: float) -> int:
-    warnings = 0
+def compare(baseline: dict, new: dict, threshold: float,
+            hard_threshold: float) -> tuple:
+    """Returns (n_warnings, n_failures) over the union of benchmarks."""
+    warnings = failures = 0
     print(f"{'benchmark':30s} {'baseline_us':>14s} {'new_us':>14s} "
           f"{'ratio':>7s}")
     for name in sorted(set(baseline) | set(new)):
@@ -35,11 +47,14 @@ def compare(baseline: dict, new: dict, threshold: float) -> int:
             continue
         ratio = n / b if b else float("inf")
         flag = ""
-        if ratio > threshold:
+        if ratio > hard_threshold:
+            flag = f"  FAIL >{hard_threshold:g}x baseline"
+            failures += 1
+        elif ratio > threshold:
             flag = f"  WARN >{threshold:g}x baseline"
             warnings += 1
         print(f"{name:30s} {b:14.0f} {n:14.0f} {ratio:7.2f}{flag}")
-    return warnings
+    return warnings, failures
 
 
 def main() -> None:
@@ -47,16 +62,24 @@ def main() -> None:
     ap.add_argument("baseline")
     ap.add_argument("new")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD)
+    ap.add_argument("--hard-threshold", type=float,
+                    default=DEFAULT_HARD_THRESHOLD)
     args = ap.parse_args()
     try:
         baseline, new = load(args.baseline), load(args.new)
     except FileNotFoundError as e:
         print(f"bench_compare: {e} — nothing to compare", file=sys.stderr)
-        return                       # warn-only: missing files never fail CI
-    warnings = compare(baseline, new, args.threshold)
+        return                       # missing files never fail CI
+    warnings, failures = compare(baseline, new, args.threshold,
+                                 args.hard_threshold)
+    if failures:
+        print(f"\nbench_compare: {failures} benchmark(s) regressed past "
+              f"{args.hard_threshold:g}x baseline — failing")
+        sys.exit(1)
     if warnings:
         print(f"\nbench_compare: {warnings} benchmark(s) slower than "
-              f"{args.threshold:g}x baseline (warn-only)")
+              f"{args.threshold:g}x baseline (warn-only below "
+              f"{args.hard_threshold:g}x)")
     else:
         print("\nbench_compare: all benchmarks within threshold")
 

@@ -1,6 +1,6 @@
-"""`repro.api` — the unified federated-run engine (see DESIGN.md §2, §6).
+"""`repro.api` — the unified federated-run engine (see DESIGN.md §2, §6, §8).
 
-Two entry points, three registries:
+Two entry points, three registries, one IR:
 
 * ``run(Experiment(...)) -> RunResult`` — executes any registered
   strategy and returns typed records.
@@ -8,9 +8,14 @@ Two entry points, three registries:
   executes a sweep (seeds, (α, β) grids, strategy options), batching
   compatible runs into single vmapped programs; per-run results are
   bit-identical to sequential ``run``.
-* Strategy registry — ``@register_strategy`` / ``get_strategy`` /
-  ``list_strategies``; FedELMY (sequential, few-shot, PFL) and the five
-  baselines ship registered.
+* Strategy-plan IR — ``StrategyPlan`` (topology / local blocks /
+  aggregate / broadcast) registered via ``register_plan``; one
+  interpreter (``repro.api.plan``) executes every plan sequentially or
+  vmapped, so every plan strategy batches. ``@register_strategy`` still
+  accepts opaque callables (sequential-only).
+* Strategy registry — ``register_plan`` / ``get_strategy`` /
+  ``list_strategies`` / ``describe_strategies``; FedELMY (sequential,
+  few-shot, PFL) and the five baselines ship as registered plans.
 * Pool-backend registry — ``register_pool_backend`` /
   ``get_pool_backend`` / ``list_pool_backends``; "stacked" (paper pool)
   and "moment" (running statistics) ship registered, selected via
@@ -21,24 +26,31 @@ Two entry points, three registries:
 """
 from repro.api.batch import BatchAxes, run_batch
 from repro.api.engine import Callbacks, Experiment, run
+from repro.api.plan import (LocalBlock, StrategyPlan, Topology, interpret,
+                            interpret_batched, tree_mean)
 from repro.api.pools import (PoolBackend, backend_for, get_pool_backend,
                              list_pool_backends, register_pool_backend)
 from repro.api.results import (BatchResult, ClientRecord, ModelRecord,
                                RoundRecord, RunResult, StrategyOutput)
-from repro.api.strategies import (StrategySpec, get_strategy,
-                                  get_strategy_spec, list_strategies,
-                                  register_strategy)
+from repro.api.strategies import (StrategySpec, describe_strategies,
+                                  get_plan, get_strategy, get_strategy_spec,
+                                  list_strategies, register_plan,
+                                  register_strategy, strategy_table)
 from repro.api.trainer import (LocalTrainer, make_plain_step,
-                               regularized_loss, stack_trees, unstack_tree)
+                               regularized_loss, stack_trees, unstack_tree,
+                               vmap_step)
 
 __all__ = [
     "run", "Experiment", "Callbacks",
     "run_batch", "BatchAxes", "BatchResult",
     "RunResult", "ClientRecord", "ModelRecord", "RoundRecord",
     "StrategyOutput", "stack_trees", "unstack_tree",
+    "StrategyPlan", "Topology", "LocalBlock", "interpret",
+    "interpret_batched", "tree_mean", "register_plan", "get_plan",
+    "describe_strategies", "strategy_table",
     "register_strategy", "get_strategy", "get_strategy_spec",
     "StrategySpec", "list_strategies",
     "register_pool_backend", "get_pool_backend", "list_pool_backends",
     "PoolBackend", "backend_for",
-    "LocalTrainer", "make_plain_step", "regularized_loss",
+    "LocalTrainer", "make_plain_step", "regularized_loss", "vmap_step",
 ]

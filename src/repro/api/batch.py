@@ -4,8 +4,9 @@ The paper's claims are sweeps (Table 1 averages seeds, Fig. 9 sweeps
 distance measures, Fig. 10 sweeps the (α, β) grid), and `api.run` pays one
 dispatch/compile wall per Python call. `run_batch` stacks the *experiment*
 axis instead: experiments that share a compiled step graph are grouped and
-executed through the vmapped step variants in `api.trainer`, so a 4-seed
-sweep or a 9-point (α, β) grid is one jitted program.
+executed through `repro.api.plan.interpret_batched` — the vmapped backend
+of the plan interpreter — so a 4-seed sweep or a 9-point (α, β) grid is
+one jitted program.
 
     from repro.api import BatchAxes, Experiment, run_batch
 
@@ -18,16 +19,18 @@ Every run must own its iterator objects (stateful streams cannot be
 shared across runs of a batch — the engine rejects sharing); the
 BatchAxes factories exist for exactly that.
 
-Grouping rules (see DESIGN.md §6):
+Grouping rules (see DESIGN.md §6, §8):
 
 * Two experiments batch together iff they share the strategy, the client
-  count / visit-order length, the strategy options, and every FedConfig
-  field except ``alpha``/``beta`` — those two are threaded through the
-  compiled program as traced per-run scalars (the Fig. 10 grid).
-* Strategies with a batched executor: ``fedelmy``, ``fedseq`` (sequential
-  chains, batched over runs) and ``dfedavgm`` / ``dfedsam`` (additionally
-  client-parallel: the run and client axes flatten into one vmap axis).
-* Everything else — singleton groups, strategies without an executor,
+  count / visit-order length, `shots`, the strategy options, and every
+  FedConfig field except ``alpha``/``beta`` — those two are threaded
+  through the compiled program as traced per-run scalars (the Fig. 10
+  grid).
+* Every plan-registered strategy batches — the interpreter owns the loop,
+  so chain (``fedelmy``/``fedseq``), ring (``fedelmy_fewshot``), two-phase
+  (``metafed``) and independent (``fedelmy_pfl``/``dfedavgm``/``dfedsam``/
+  ``local_only``) topologies all execute vmapped.
+* Everything else — singleton groups, opaque (plan-less) strategies,
   experiments with callbacks attached — falls back to sequential `api.run`
   per experiment. The result order always matches the input order.
 """
@@ -35,18 +38,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
 from repro.api.engine import (Experiment, finalize_result, run,
                               warn_unsupported_fields)
-from repro.api.results import BatchResult, ClientRecord, RunResult, \
-    StrategyOutput
-from repro.api.strategies import _tree_mean
-from repro.api.trainer import LocalTrainer, stack_trees, unstack_tree
-from repro.optim.sam import sam_update
+from repro.api.plan import interpret_batched
+from repro.api.results import BatchResult, RunResult
+from repro.api.strategies import get_strategy_spec
 
 PyTree = Any
 
@@ -123,11 +123,17 @@ def _group_key(e: Experiment) -> tuple:
     # id(loss_fn): a batched group trains every run through ONE compiled
     # loss — two models whose params merely happen to share shapes must
     # never alias (ids are stable here: the experiment list keeps every
-    # model alive for the duration of the call).
-    return (e.strategy, _static_fed(e.fed), id(e.model.loss_fn),
-            len(e.client_iters), len(e.resolved_order()),
-            tuple(sorted((k, repr(v))
-                         for k, v in e.strategy_options.items())))
+    # model alive for the duration of the call). `shots` is loop structure
+    # for ring plans; a plan whose warmup depends on init_params (resume)
+    # additionally splits on init presence.
+    key = (e.strategy, _static_fed(e.fed), id(e.model.loss_fn),
+           len(e.client_iters), len(e.resolved_order()), e.shots,
+           tuple(sorted((k, repr(v))
+                        for k, v in e.strategy_options.items())))
+    plan = get_strategy_spec(e.strategy).plan
+    if plan is not None and plan.init_skips_warmup:
+        key += (e.init_params is not None,)
+    return key
 
 
 def _check_no_shared_iterators(exps: List[Experiment]) -> None:
@@ -151,138 +157,11 @@ def _check_no_shared_iterators(exps: List[Experiment]) -> None:
 
 
 def _batchable(e: Experiment) -> bool:
-    return (e.strategy in _BATCHED_EXECUTORS
+    """Plan strategies batch; opaque callables and callback-bearing runs
+    (callbacks observe sequential per-client state) fall back to `run`."""
+    return (get_strategy_spec(e.strategy).plan is not None
             and e.callbacks.on_model_end is None
             and e.callbacks.on_client_end is None)
-
-
-# ---------------------------------------------------------------------------
-# Batched executors: List[Experiment] -> List[StrategyOutput]
-# ---------------------------------------------------------------------------
-
-def _eval_slice(e: Experiment, stacked: PyTree, i: int) -> Optional[float]:
-    return (float(e.eval_fn(unstack_tree(stacked, i)))
-            if e.eval_fn is not None else None)
-
-
-def _stacked_inits(exps: List[Experiment], mesh) -> PyTree:
-    inits = [e.init_params if e.init_params is not None
-             else e.model.init(e.resolved_key()) for e in exps]
-    m = stack_trees(inits)
-    if mesh is not None:
-        from repro.sharding.specs import shard_run_batch
-        m = shard_run_batch(m, mesh)
-    return m
-
-
-def _alphas_betas(exps: List[Experiment]) -> Tuple[jax.Array, jax.Array]:
-    return (jnp.asarray([e.fed.alpha for e in exps], jnp.float32),
-            jnp.asarray([e.fed.beta for e in exps], jnp.float32))
-
-
-def _exec_fedelmy(exps: List[Experiment], mesh) -> List[StrategyOutput]:
-    """Alg. 1 over B runs in lockstep: the chain/warmup/pool loop structure
-    is static across the group (same FedConfig modulo α/β), only the data,
-    the keys and (α, β) vary per run."""
-    fed = exps[0].fed
-    trainer = LocalTrainer(exps[0].model.loss_fn, fed)
-    orders = [e.resolved_order() for e in exps]
-    alphas, betas = _alphas_betas(exps)
-    m = _stacked_inits(exps, mesh)
-    warm_iters = [e.client_iters[o[0]] for e, o in zip(exps, orders)]
-    m, _ = trainer.train_batched(m, warm_iters, fed.e_warmup)
-
-    clients: List[List[ClientRecord]] = [[] for _ in exps]
-    pools = None
-    for rank in range(len(orders[0])):
-        its = [e.client_iters[o[rank]] for e, o in zip(exps, orders)]
-        m, pools, recs = trainer.local_client_train_batched(
-            m, its, alphas, betas)
-        for i, e in enumerate(exps):
-            clients[i].append(ClientRecord(
-                client=int(orders[i][rank]), rank=rank, models=recs[i],
-                global_metric=_eval_slice(e, m, i)))
-    return [StrategyOutput(
-                params=unstack_tree(m, i), clients=clients[i],
-                final_pool=None if pools is None else unstack_tree(pools, i))
-            for i in range(len(exps))]
-
-
-def _exec_fedseq(exps: List[Experiment], mesh) -> List[StrategyOutput]:
-    fed = exps[0].fed
-    trainer = LocalTrainer(exps[0].model.loss_fn, fed)
-    orders = [e.resolved_order() for e in exps]
-    m = _stacked_inits(exps, mesh)
-    clients: List[List[ClientRecord]] = [[] for _ in exps]
-    for rank in range(len(orders[0])):
-        its = [e.client_iters[o[rank]] for e, o in zip(exps, orders)]
-        m, _ = trainer.train_batched(m, its, fed.e_local)
-        for i, e in enumerate(exps):
-            clients[i].append(ClientRecord(
-                client=int(orders[i][rank]), rank=rank,
-                global_metric=_eval_slice(e, m, i)))
-    return [StrategyOutput(params=unstack_tree(m, i), clients=clients[i])
-            for i in range(len(exps))]
-
-
-def _exec_client_parallel(exps: List[Experiment], mesh, *,
-                          make_trainer: Callable,
-                          make_step: Optional[Callable] = None,
-                          ) -> List[StrategyOutput]:
-    """DFedAvgM/DFedSAM: clients within a run are independent, so the run
-    and client axes flatten into one (B·N,) vmap axis — within-round
-    client-parallel training on top of the cross-run batching."""
-    fed = exps[0].fed
-    n = len(exps[0].client_iters)
-    trainer = make_trainer(exps[0].model.loss_fn, fed)
-    m0s = [e.model.init(e.resolved_key()) for e in exps]
-    flat = stack_trees([m0 for m0 in m0s for _ in range(n)])
-    if mesh is not None:
-        from repro.sharding.specs import shard_run_batch
-        flat = shard_run_batch(flat, mesh)
-    flat_iters = [it for e in exps for it in e.client_iters]
-    step_fn = make_step(trainer) if make_step is not None else None
-    flat, _ = trainer.train_batched(flat, flat_iters, fed.e_local,
-                                    step_fn=step_fn)
-    outs = []
-    for i in range(len(exps)):
-        locals_ = [unstack_tree(flat, i * n + k) for k in range(n)]
-        outs.append(StrategyOutput(params=_tree_mean(locals_)))
-    return outs
-
-
-def _exec_dfedavgm(exps: List[Experiment], mesh) -> List[StrategyOutput]:
-    return _exec_client_parallel(
-        exps, mesh,
-        make_trainer=lambda loss_fn, fed: LocalTrainer(
-            loss_fn, fed, optimizer="momentum",
-            learning_rate=fed.learning_rate * 10))
-
-
-def _exec_dfedsam(exps: List[Experiment], mesh) -> List[StrategyOutput]:
-    rho = exps[0].strategy_options.get("rho", 0.05)
-    loss_fn = exps[0].model.loss_fn
-
-    def make_step(trainer):
-        def one(params, opt_state, batch, s):
-            return (*sam_update(loss_fn, params, batch, trainer.opt,
-                                opt_state, s, rho=rho), 0.0)
-        return jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)),
-                       donate_argnums=(0, 1))
-
-    return _exec_client_parallel(
-        exps, mesh,
-        make_trainer=lambda lf, fed: LocalTrainer(
-            lf, fed, optimizer="sgd", learning_rate=fed.learning_rate * 10),
-        make_step=make_step)
-
-
-_BATCHED_EXECUTORS: Dict[str, Callable] = {
-    "fedelmy": _exec_fedelmy,
-    "fedseq": _exec_fedseq,
-    "dfedavgm": _exec_dfedavgm,
-    "dfedsam": _exec_dfedsam,
-}
 
 
 # ---------------------------------------------------------------------------
@@ -336,8 +215,9 @@ def run_batch(experiment: Optional[Experiment] = None,
         for e in sub:          # fallback runs warn inside run() instead
             warn_unsupported_fields(e)
         _check_no_shared_iterators(sub)
+        plan = get_strategy_spec(sub[0].strategy).plan
         g0 = time.time()
-        outs = _BATCHED_EXECUTORS[sub[0].strategy](sub, mesh)
+        outs = interpret_batched(sub, plan, mesh)
         per_run = (time.time() - g0) / len(sub)
         for i, e, out in zip(idxs, sub, outs):
             results[i] = finalize_result(e, out, per_run)

@@ -116,5 +116,7 @@ def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
     spec = get_strategy_spec(experiment.strategy)
     warn_unsupported_fields(experiment)
     t0 = time.time()
+    # For plan strategies `fn` is the sequential interpreter backend bound
+    # to the registered plan (register_plan); opaque callables run as-is.
     out = spec.fn(experiment)
     return finalize_result(experiment, out, time.time() - t0)

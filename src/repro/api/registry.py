@@ -43,6 +43,10 @@ class Registry:
     def names(self) -> List[str]:
         return sorted(self._items)
 
+    def items(self) -> List[tuple]:
+        """(name, object) pairs in name order — for metadata listings."""
+        return [(name, self._items[name]) for name in self.names()]
+
     def __contains__(self, name: str) -> bool:
         return name in self._items
 

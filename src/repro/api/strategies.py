@@ -1,59 +1,74 @@
-"""The strategy registry: every federated algorithm as a first-class,
-uniformly-invokable strategy.
+"""The strategy registry: every federated algorithm as a registered
+`StrategyPlan` (see `repro.api.plan`), uniformly executed by the plan
+interpreter.
 
-A strategy is a callable ``(Experiment) -> StrategyOutput`` registered
-under a name. ``api.run`` resolves the name, times the call, evaluates
-the final model, and wraps everything in a ``RunResult`` — so adding a
-new one-shot FL method (the surveys arXiv:2502.09104 / arXiv:2505.02426
-catalogue dozens) is a single ``@register_strategy`` function.
+A strategy used to be a monolithic ``(Experiment) -> StrategyOutput``
+callable; it is now declarative data — topology, local block(s),
+aggregation, broadcast — that one interpreter runs sequentially
+(``api.run``) or vmapped over a sweep (``api.run_batch``). Adding a
+one-shot FL method (the surveys arXiv:2502.09104 / arXiv:2505.02426
+catalogue dozens) is a single ``register_plan`` call, and the new method
+gets batched/sharded execution, callbacks and checkpoint hooks for free.
+``register_strategy`` still accepts opaque callables for methods the IR
+cannot express (those fall back to sequential execution in batches).
 
 Registered here:
 
-* ``fedelmy``          — paper Alg. 1, one-shot sequential chain
-* ``fedelmy_fewshot``  — paper Alg. 2, T cycles around the ring
-* ``fedelmy_pfl``      — paper Alg. 3, decentralized PFL adaptation
-* ``fedseq``           — sequential chain, no pool/d1/d2 (SOTA baseline)
-* ``dfedavgm``         — decentralized FedAvg w/ momentum, one-shot gossip
-* ``dfedsam``          — DFedAvgM with SAM local steps
-* ``metafed``          — two cyclic passes w/ anchored personalization
-* ``local_only``       — single-client training (sanity floor)
+* ``fedelmy``          — paper Alg. 1: chain topology, pool block
+* ``fedelmy_fewshot``  — paper Alg. 2: ring × ``Experiment.shots``
+* ``fedelmy_pfl``      — paper Alg. 3: independent, per-client inits,
+                          pool block, tree-mean aggregate
+* ``fedseq``           — chain, plain block (SOTA baseline)
+* ``dfedavgm``         — independent, shared init, momentum local opt
+* ``dfedsam``          — dfedavgm with a custom SAM step block
+* ``metafed``          — chain × two phases; phase 2 anchored on the
+                          phase-1 result (common-knowledge model)
+* ``local_only``       — independent over one selected client
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, List, NamedTuple
+from typing import Callable, Dict, List, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro.api.plan import LocalBlock, StrategyPlan, Topology, interpret
 from repro.api.registry import Registry
-from repro.api.results import ClientRecord, RoundRecord, StrategyOutput
-from repro.api.trainer import LocalTrainer, make_plain_step
+from repro.api.trainer import make_plain_step, vmap_step
 from repro.core.distances import d2_anchor_distance, log_scale
-from repro.optim import make_optimizer
 from repro.optim.sam import sam_update
-
-PyTree = Any
 
 STRATEGIES = Registry("strategy")
 
 
 class StrategySpec(NamedTuple):
-    """A registered strategy plus the optional Experiment fields it
-    honors ("init_params", "order", "shots"); the engine warns when a
-    set field is not in `supports` rather than silently ignoring it."""
+    """A registered strategy: the callable the engine invokes, the
+    optional Experiment fields it honors ("init_params", "order",
+    "shots"; the engine warns when a set field is not in `supports`),
+    and — for plan strategies — the `StrategyPlan` itself (None for
+    opaque callables, which cannot batch)."""
     fn: Callable
     supports: frozenset
+    plan: Optional[StrategyPlan] = None
 
 
 def register_strategy(name: str, *, supports: tuple = ()) -> Callable:
     """Decorator: ``@register_strategy("mymethod", supports=("order",))``
-    over an ``(Experiment) -> StrategyOutput`` callable. `supports`
-    declares which optional Experiment fields the strategy consumes."""
+    over an ``(Experiment) -> StrategyOutput`` callable, for methods the
+    plan IR cannot express. Plan-less strategies run sequentially only."""
     def deco(fn: Callable) -> Callable:
         STRATEGIES.register(name, StrategySpec(fn, frozenset(supports)))
         return fn
     return deco
+
+
+def register_plan(name: str, plan: StrategyPlan) -> StrategyPlan:
+    """Register a declarative strategy. The engine executes it through
+    `plan.interpret`; `run_batch` through `plan.interpret_batched`."""
+    fn = functools.partial(interpret, plan=plan)
+    STRATEGIES.register(name, StrategySpec(fn, frozenset(plan.supports),
+                                           plan))
+    return plan
 
 
 def get_strategy(name: str) -> Callable:
@@ -64,172 +79,164 @@ def get_strategy_spec(name: str) -> StrategySpec:
     return STRATEGIES.get(name)
 
 
+def get_plan(name: str) -> Optional[StrategyPlan]:
+    return STRATEGIES.get(name).plan
+
+
 def list_strategies() -> List[str]:
     return STRATEGIES.names()
 
 
-def _tree_mean(trees):
-    return jax.tree.map(
-        lambda *xs: jnp.mean(jnp.stack([x.astype(jnp.float32) for x in xs]),
-                             axis=0).astype(xs[0].dtype), *trees)
+def describe_strategies() -> Dict[str, Dict[str, str]]:
+    """name → plan metadata (topology / local block / aggregate /
+    broadcast / batched) for every registered strategy; opaque callables
+    report a sequential-only row."""
+    out: Dict[str, Dict[str, str]] = {}
+    for name, spec in STRATEGIES.items():
+        if spec.plan is None:
+            out[name] = {"topology": "(opaque callable)",
+                         "local_block": "—", "aggregate": "—",
+                         "broadcast": "—", "batched": "no",
+                         "supports": ",".join(sorted(spec.supports)) or "—"}
+        else:
+            out[name] = {**spec.plan.describe(), "batched": "yes"}
+    return out
 
 
-def _eval(exp, params):
-    return float(exp.eval_fn(params)) if exp.eval_fn is not None else None
-
-
-# ---------------------------------------------------------------------------
-# FedELMY family (paper Algorithms 1–3)
-# ---------------------------------------------------------------------------
-
-@register_strategy("fedelmy", supports=("init_params", "order"))
-def fedelmy(exp) -> StrategyOutput:
-    """Alg. 1: warm up on the first client, then chain each client's
-    pool-of-S local procedure, handing off the pool average."""
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
-    order = exp.resolved_order()
-    m = (exp.init_params if exp.init_params is not None
-         else exp.model.init(exp.resolved_key()))
-    m, _ = trainer.train(m, exp.client_iters[order[0]], exp.fed.e_warmup)
-
-    clients: List[ClientRecord] = []
-    pool = None
-    for rank, ci in enumerate(order):
-        m, pool, models = trainer.local_client_train(
-            m, exp.client_iters[ci],
-            on_model_end=exp.callbacks.on_model_end)
-        rec = ClientRecord(client=int(ci), rank=rank, models=models,
-                           global_metric=_eval(exp, m))
-        clients.append(rec)
-        if exp.callbacks.on_client_end is not None:
-            exp.callbacks.on_client_end(rec, m)
-    return StrategyOutput(params=m, clients=clients, final_pool=pool)
-
-
-@register_strategy("fedelmy_fewshot", supports=("shots",))
-def fedelmy_fewshot(exp) -> StrategyOutput:
-    """Alg. 2: T (= exp.shots) cycles around the client ring."""
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
-    m = exp.model.init(exp.resolved_key())
-    m, _ = trainer.train(m, exp.client_iters[0], exp.fed.e_warmup)
-
-    rounds: List[RoundRecord] = []
-    pool = None
-    for r in range(exp.shots):
-        for ci in range(len(exp.client_iters)):
-            m, pool, _ = trainer.local_client_train(m, exp.client_iters[ci])
-        rec = RoundRecord(round=r, global_metric=_eval(exp, m))
-        rounds.append(rec)
-        if exp.callbacks.on_client_end is not None:
-            exp.callbacks.on_client_end(rec, m)
-    return StrategyOutput(params=m, rounds=rounds, final_pool=pool)
-
-
-@register_strategy("fedelmy_pfl")
-def fedelmy_pfl(exp) -> StrategyOutput:
-    """Alg. 3: clients train in parallel from independent inits, then a
-    one-shot average (decentralized PFL adaptation)."""
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
-    n = len(exp.client_iters)
-    avgs = []
-    clients: List[ClientRecord] = []
-    for ci, keyc in enumerate(jax.random.split(exp.resolved_key(), n)):
-        m0 = exp.model.init(keyc)        # independent random init per client
-        m0, _ = trainer.train(m0, exp.client_iters[ci], exp.fed.e_warmup)
-        m_avg, _, models = trainer.local_client_train(
-            m0, exp.client_iters[ci],
-            on_model_end=exp.callbacks.on_model_end)
-        avgs.append(m_avg)
-        rec = ClientRecord(client=ci, rank=ci, models=models)
-        clients.append(rec)
-        if exp.callbacks.on_client_end is not None:
-            exp.callbacks.on_client_end(rec, m_avg)
-    return StrategyOutput(params=_tree_mean(avgs), clients=clients)
+def strategy_table() -> str:
+    """The README strategy table, regenerated from plan metadata (a test
+    pins the README copy against this output)."""
+    lines = ["| strategy | topology | local block | aggregate | broadcast "
+             "| batched |",
+             "|---|---|---|---|---|---|"]
+    for name, d in describe_strategies().items():
+        lines.append(f"| `{name}` | {d['topology']} | {d['local_block']} "
+                     f"| {d['aggregate']} | {d['broadcast']} "
+                     f"| {d['batched']} |")
+    return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
-# Baselines (paper §4.1, one-shot adaptations per the appendix)
+# Custom step factories (DFedSAM's SAM step, MetaFed's anchored penalty)
 # ---------------------------------------------------------------------------
 
-@register_strategy("fedseq", supports=("init_params", "order"))
-def fedseq(exp) -> StrategyOutput:
-    """One-shot sequential FedAvg-style chain (Li & Lyu 2024 adapted):
-    one model, E_local plain steps per client, no pool/d1/d2."""
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
-    m = (exp.init_params if exp.init_params is not None
-         else exp.model.init(exp.resolved_key()))
-    clients: List[ClientRecord] = []
-    for rank, ci in enumerate(exp.resolved_order()):
-        m, _ = trainer.train(m, exp.client_iters[ci], exp.fed.e_local)
-        rec = ClientRecord(client=int(ci), rank=rank,
-                           global_metric=_eval(exp, m))
-        clients.append(rec)
-        if exp.callbacks.on_client_end is not None:
-            exp.callbacks.on_client_end(rec, m)
-    return StrategyOutput(params=m, clients=clients)
-
-
-@register_strategy("dfedavgm")
-def dfedavgm(exp) -> StrategyOutput:
-    """Decentralized parallel FedAvg with heavy-ball momentum; one-shot
-    mesh gossip with all-select reduces to a full average."""
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed,
-                           optimizer="momentum",
-                           learning_rate=exp.fed.learning_rate * 10)
-    m0 = exp.model.init(exp.resolved_key())
-    locals_ = [trainer.train(m0, it, exp.fed.e_local)[0]
-               for it in exp.client_iters]
-    return StrategyOutput(params=_tree_mean(locals_))
-
-
-@register_strategy("dfedsam")
-def dfedsam(exp) -> StrategyOutput:
-    """DFedAvgM with SAM local steps (rho via strategy_options)."""
+def _sam_step(trainer, exp, anchor):
     rho = exp.strategy_options.get("rho", 0.05)
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed,
-                           optimizer="sgd",
-                           learning_rate=exp.fed.learning_rate * 10)
-    loss_fn, opt = exp.model.loss_fn, trainer.opt
+    loss_fn = exp.model.loss_fn
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def sam_step(params, opt_state, batch, s):
-        return (*sam_update(loss_fn, params, batch, opt, opt_state, s,
-                            rho=rho), 0.0)
+        return (*sam_update(loss_fn, params, batch, trainer.opt, opt_state,
+                            s, rho=rho), 0.0)
 
-    m0 = exp.model.init(exp.resolved_key())
-    locals_ = [trainer.train(m0, it, exp.fed.e_local, step_fn=sam_step)[0]
-               for it in exp.client_iters]
-    return StrategyOutput(params=_tree_mean(locals_))
+    return sam_step
 
 
-@register_strategy("metafed")
-def metafed(exp) -> StrategyOutput:
-    """Two cyclic passes: common-knowledge accumulation, then
-    personalization with an anchor penalty toward the common model
-    (anchor_beta via strategy_options)."""
-    anchor_beta = exp.strategy_options.get("anchor_beta", 0.5)
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
-    m = exp.model.init(exp.resolved_key())
-    for it in exp.client_iters:                   # pass 1
-        m, _ = trainer.train(m, it, exp.fed.e_local // 2)
-    common = m
+def _sam_step_batched(trainer, exps, anchors):
+    rho = exps[0].strategy_options.get("rho", 0.05)
+    loss_fn = exps[0].model.loss_fn
 
-    def anchored_loss(params, batch):
-        task = exp.model.loss_fn(params, batch)
-        d = d2_anchor_distance(params, common, "l2")
+    def one(params, opt_state, batch, s):
+        return (*sam_update(loss_fn, params, batch, trainer.opt, opt_state,
+                            s, rho=rho), 0.0)
+
+    return vmap_step(one)
+
+
+def _anchored_loss(loss_fn, anchor_beta):
+    """MetaFed pass 2: task loss + β·(distance to the common model),
+    log-calibrated like the paper's d2 term."""
+    def loss(params, batch, anchor):
+        task = loss_fn(params, batch)
+        d = d2_anchor_distance(params, anchor, "l2")
         return task + anchor_beta * log_scale(d, task)
-
-    anchored = make_plain_step(anchored_loss, trainer.opt)
-    for it in exp.client_iters:                   # pass 2
-        m, _ = trainer.train(m, it, exp.fed.e_local // 2, step_fn=anchored)
-    return StrategyOutput(params=m)
+    return loss
 
 
-@register_strategy("local_only")
-def local_only(exp) -> StrategyOutput:
-    """Single-client training (client index via strategy_options)."""
-    client = exp.strategy_options.get("client", 0)
-    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
-    m, _ = trainer.train(exp.model.init(exp.resolved_key()),
-                         exp.client_iters[client], exp.fed.e_local)
-    return StrategyOutput(params=m)
+def _metafed_anchor_step(trainer, exp, anchor):
+    anchored = _anchored_loss(exp.model.loss_fn,
+                              exp.strategy_options.get("anchor_beta", 0.5))
+    return make_plain_step(lambda p, b: anchored(p, b, anchor), trainer.opt)
+
+
+def _metafed_anchor_step_batched(trainer, exps, anchors):
+    # `anchors` is the stacked phase-1 result; it rides through the vmapped
+    # step as a per-run pytree argument (the lambda pins it per phase).
+    anchored = _anchored_loss(
+        exps[0].model.loss_fn,
+        exps[0].strategy_options.get("anchor_beta", 0.5))
+
+    def one(params, opt_state, batch, anchor, s):
+        task, grads = jax.value_and_grad(
+            lambda p: anchored(p, batch, anchor))(params)
+        params, opt_state = trainer.opt.update(params, grads, opt_state, s)
+        return params, opt_state, task
+
+    inner = vmap_step(one, n_stacked_extras=1)
+    return lambda params, opt_state, batch, s: inner(params, opt_state,
+                                                     batch, anchors, s)
+
+
+# ---------------------------------------------------------------------------
+# The eight registered plans (paper Algorithms 1–3 + §4.1 baselines)
+# ---------------------------------------------------------------------------
+
+register_plan("fedelmy", StrategyPlan(
+    topology=Topology("chain", honors_order=True),
+    phases=(LocalBlock("pool"),),
+    aggregate="last", broadcast="handoff",
+    init_from_experiment=True, warmup="first",
+    records="clients", keep_final_pool=True,
+    supports=("init_params", "order")))
+
+register_plan("fedelmy_fewshot", StrategyPlan(
+    topology=Topology("ring", cycles="shots"),
+    phases=(LocalBlock("pool"),),
+    aggregate="last", broadcast="handoff",
+    init_from_experiment=True, warmup="first", init_skips_warmup=True,
+    records="rounds", keep_final_pool=True,
+    supports=("shots", "init_params")))
+
+register_plan("fedelmy_pfl", StrategyPlan(
+    topology=Topology("independent"),
+    phases=(LocalBlock("pool"),),
+    aggregate="tree_mean", broadcast="per_client_init",
+    warmup="per_client", records="clients_noeval"))
+
+register_plan("fedseq", StrategyPlan(
+    topology=Topology("chain", honors_order=True),
+    phases=(LocalBlock("plain"),),
+    aggregate="last", broadcast="handoff",
+    init_from_experiment=True, records="clients",
+    supports=("init_params", "order")))
+
+register_plan("dfedavgm", StrategyPlan(
+    topology=Topology("independent"),
+    phases=(LocalBlock("plain"),),
+    aggregate="tree_mean", broadcast="shared_init",
+    trainer_overrides=lambda fed: {"optimizer": "momentum",
+                                   "learning_rate": fed.learning_rate * 10}))
+
+register_plan("dfedsam", StrategyPlan(
+    topology=Topology("independent"),
+    phases=(LocalBlock("custom", step_factory=_sam_step,
+                       batched_step_factory=_sam_step_batched,
+                       label="sam"),),
+    aggregate="tree_mean", broadcast="shared_init",
+    trainer_overrides=lambda fed: {"optimizer": "sgd",
+                                   "learning_rate": fed.learning_rate * 10}))
+
+register_plan("metafed", StrategyPlan(
+    topology=Topology("chain"),
+    phases=(LocalBlock("plain", epochs_div=2),
+            LocalBlock("custom", epochs_div=2, anchored=True,
+                       step_factory=_metafed_anchor_step,
+                       batched_step_factory=_metafed_anchor_step_batched,
+                       label="anchored")),
+    aggregate="last", broadcast="handoff"))
+
+register_plan("local_only", StrategyPlan(
+    topology=Topology("independent"),
+    phases=(LocalBlock("plain"),),
+    aggregate="last", broadcast="shared_init",
+    client_selector=lambda exp: [exp.strategy_options.get("client", 0)]))

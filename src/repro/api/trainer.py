@@ -97,6 +97,19 @@ def make_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
     return step_fn
 
 
+def vmap_step(one_step: Callable, n_stacked_extras: int = 0):
+    """Lift a per-run step ``(params, opt_state, batch, *extras, step)``
+    into the batched-step contract: jitted vmap over a leading run axis on
+    params/opt_state/batch (and on ``n_stacked_extras`` trailing pytree
+    args — e.g. MetaFed's per-run anchor), with the step counter held
+    scalar. Donates params/opt_state like every compiled step. The plan
+    interpreter's custom ``batched_step_factory`` hooks build on this so a
+    strategy's batched variant is *exactly* its sequential graph under
+    ``vmap`` — the bit-identity contract `run_batch` tests rely on."""
+    axes = (0, 0, 0) + (0,) * n_stacked_extras + (None,)
+    return jax.jit(jax.vmap(one_step, in_axes=axes), donate_argnums=(0, 1))
+
+
 def make_batched_plain_step(loss_fn: Callable, opt: Optimizer):
     """Vmapped variant of ``make_plain_step``: every argument except the
     step counter carries a leading run axis, so B independent runs advance

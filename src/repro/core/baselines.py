@@ -1,15 +1,18 @@
 """Deprecated baseline driver wrappers (paper §4.1).
 
 The baselines (FedSeq, DFedAvgM, DFedSAM, MetaFed, local_only) are now
-first-class strategies in the registry — use::
+registered `StrategyPlan`s (see `repro.api.plan`) executed by the plan
+interpreter — which also gives every one of them batched execution under
+`api.run_batch` — use::
 
     from repro.api import Experiment, run
     m = run(Experiment(model=model, client_iters=iters, fed=fed,
                        strategy="fedseq")).params
 
 The ``run_*`` functions below delegate to the engine and return the bare
-final params like the old hand-rolled drivers did. ``BASELINES`` keeps
-the legacy name → driver map for old call-sites.
+final params like the old hand-rolled drivers did; they stay bit-identical
+to the pre-plan drivers on fixed seeds (pinned in tests/test_plan.py).
+``BASELINES`` keeps the legacy name → driver map for old call-sites.
 """
 from __future__ import annotations
 

@@ -1,14 +1,19 @@
 """FedELMY: the Eq. 9 regularized objective + legacy driver wrappers.
 
 The drivers (Algorithm 1 one-shot SFL, Algorithm 2 few-shot, Algorithm 3
-decentralized PFL) now live in the strategy registry — use::
+decentralized PFL) now live in the strategy registry as declarative
+`StrategyPlan`s (chain / ring×shots / independent topologies over the
+pool local block — see `repro.api.plan`), executed by the one plan
+interpreter — use::
 
     from repro.api import Experiment, run
     result = run(Experiment(model=model, client_iters=iters, fed=fed,
                             strategy="fedelmy"))
 
 The ``run_fedelmy*`` functions below are thin deprecated wrappers that
-delegate to the engine and return the legacy ``(params, history)`` tuples.
+delegate to the engine and return the legacy ``(params, history)`` tuples;
+they stay bit-identical to the pre-plan drivers on fixed seeds (pinned in
+tests/test_plan.py).
 """
 from __future__ import annotations
 

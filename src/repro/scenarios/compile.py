@@ -179,14 +179,18 @@ def build_experiments(spec: ScenarioSpec, model, *,
                       fed: FedConfig,
                       strategies: Sequence[str] = ("fedelmy",),
                       seeds: Sequence[int] = (0,),
+                      shots: int = 1,
                       eval_builder: Optional[Callable] = None,
                       strategy_options: Optional[Dict[str, Dict]] = None,
                       ) -> List[Experiment]:
     """Compile a scenario sweep into Experiments: one per (strategy, seed),
     sharing one materialization per seed but minting fresh iterators per
     experiment. All seeds of a strategy share the static FedConfig, so
-    `run_batch` compiles each strategy's sweep as ONE group (per-strategy
-    `strategy_options` keep the grouping — they're part of the key)."""
+    `run_batch` compiles each strategy's sweep as ONE group — since the
+    plan IR landed that includes ring (`fedelmy_fewshot`, cycled `shots`
+    times) and two-phase (`metafed`) strategies, not just the chains.
+    Per-strategy `strategy_options` keep the grouping — they're part of
+    the key, as is `shots`."""
     fed = dataclasses.replace(fed, n_clients=spec.n_active)
     build_eval = eval_builder if eval_builder is not None else accuracy_eval
     datas = {seed: materialize(spec, seed) for seed in seeds}
@@ -195,6 +199,7 @@ def build_experiments(spec: ScenarioSpec, model, *,
     return [Experiment(model=model, client_iters=datas[seed].iterators(),
                        fed=fed, strategy=strategy,
                        key=jax.random.PRNGKey(seed), eval_fn=evals[seed],
+                       shots=shots,
                        strategy_options=dict(opts.get(strategy, {})))
             for strategy in strategies for seed in seeds]
 

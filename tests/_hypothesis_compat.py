@@ -47,6 +47,17 @@ class _Strategies:
         elements = list(elements)
         return _Strategy(lambda rng: rng.choice(elements), list(elements))
 
+    @staticmethod
+    def permutations(values) -> _Strategy:
+        values = list(values)
+
+        def sample(rng: random.Random):
+            out = list(values)
+            rng.shuffle(out)
+            return out
+
+        return _Strategy(sample, [list(values), list(reversed(values))])
+
 
 st = _Strategies()
 strategies = st

@@ -97,7 +97,57 @@ def test_run_batch_seeds_bit_identical_to_sequential_fedelmy():
                                     b.final_pool.members)
 
 
-@pytest.mark.parametrize("strategy", ["fedseq", "dfedavgm", "dfedsam"])
+@pytest.mark.parametrize("strategy", ["metafed", "fedelmy_fewshot"])
+def test_metafed_and_fewshot_batch_as_one_group(strategy):
+    """The acceptance gate for the plan IR: metafed (two interpreted
+    passes) and fedelmy_fewshot (ring cycling as topology data) now
+    execute batched — a 4-seed sweep is ONE compiled group and matches
+    sequential `run` bit-for-bit."""
+    model = _tiny_model()
+    metric = _metric_fn(model)
+    seeds = [0, 1, 2, 3]
+    shots = 2 if strategy == "fedelmy_fewshot" else 1
+    seq = [run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                          strategy=strategy, key=jax.random.PRNGKey(s),
+                          eval_fn=metric, shots=shots))
+           for s in seeds]
+    batch = run_batch(
+        Experiment(model=model, client_iters=_iters(), fed=FED,
+                   strategy=strategy, eval_fn=metric, shots=shots),
+        axes=BatchAxes(seeds=seeds, client_iters_for_seed=_iters))
+    assert batch.n_compiled_groups == 1
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params, strategy)
+        assert b.final_metric == s.final_metric
+        assert len(b.rounds) == len(s.rounds)
+        for rs, rb in zip(s.rounds, b.rounds):
+            assert (rb.round, rb.global_metric) == (rs.round,
+                                                    rs.global_metric)
+
+
+def test_pfl_batches_with_client_records():
+    """fedelmy_pfl flattens the run×client axes; per-client records (with
+    per-model task losses) match the sequential interpreter exactly."""
+    model = _tiny_model()
+    seeds = [0, 1, 2]
+    seq = [run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                          strategy="fedelmy_pfl", key=jax.random.PRNGKey(s)))
+           for s in seeds]
+    batch = run_batch(
+        Experiment(model=model, client_iters=_iters(), fed=FED,
+                   strategy="fedelmy_pfl"),
+        axes=BatchAxes(seeds=seeds, client_iters_for_seed=_iters))
+    assert batch.n_compiled_groups == 1
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params)
+        assert [(c.client, c.rank) for c in b.clients] == \
+            [(c.client, c.rank) for c in s.clients]
+        assert [[m.task_loss for m in c.models] for c in b.clients] == \
+            [[m.task_loss for m in c.models] for c in s.clients]
+
+
+@pytest.mark.parametrize("strategy", ["fedseq", "dfedavgm", "dfedsam",
+                                      "local_only"])
 def test_run_batch_bit_identical_baselines(strategy):
     model = _tiny_model()
     seeds = [0, 1]
@@ -170,9 +220,9 @@ def test_run_batch_bit_identical_on_cnn():
 # ---------------------------------------------------------------------------
 
 def test_mixed_strategies_group_and_fall_back():
-    """A mixed experiment list: batchable runs group, strategies without a
-    batched executor and callback-bearing runs fall back to sequential —
-    result order always matches input order."""
+    """A mixed experiment list: batchable runs group; singleton groups
+    (here the lone metafed run) and callback-bearing runs fall back to
+    sequential — result order always matches input order."""
     model = _tiny_model()
     seen = []
     cb = Callbacks(on_model_end=lambda rec, p: seen.append(rec.index))

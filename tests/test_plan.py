@@ -1,0 +1,444 @@
+"""Tests for the strategy-plan IR (`repro.api.plan`).
+
+Three groups:
+
+1. *Pre-refactor equivalence* — frozen copies of the eight monolithic
+   strategy bodies (exactly as they stood before the plan IR landed)
+   executed against the plan interpreter on fixed seeds; params, records
+   and pools must match bit-for-bit. This pins the refactor's contract
+   without committing hardware-dependent golden arrays.
+2. *Plan topology properties* — `order` permutation handling on chain
+   plans (visit sequence == the permutation, batched == sequential per
+   run), ring plans ignoring `order`, and the n_compiled_groups == 1
+   invariant for every plan strategy under a multi-seed sweep.
+3. *IR validation* — malformed plans fail at construction, not mid-run.
+"""
+import dataclasses
+import functools
+import itertools
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.api import (BatchAxes, Experiment, LocalBlock, LocalTrainer,
+                       StrategyPlan, Topology, get_plan, list_strategies,
+                       make_plain_step, run, run_batch, tree_mean)
+from repro.api.results import ClientRecord, RoundRecord, StrategyOutput
+from repro.configs import FedConfig
+from repro.core.distances import d2_anchor_distance, log_scale
+from repro.optim.sam import sam_update
+
+KEY = jax.random.PRNGKey(0)
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _tiny_model():
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (4, 3)),
+                "b": jnp.zeros((3,))}
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(batch["y"], 3)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    def forward(params, batch):
+        return batch["x"] @ params["w"] + params["b"]
+
+    return TinyModel(init, loss_fn, forward)
+
+
+def _client_iter(seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 4))
+    y = jnp.arange(8) % 3
+    return itertools.cycle([{"x": x, "y": y}])
+
+
+def _iters(n=2, seed=0):
+    return [_client_iter(i) for i in range(n)]
+
+
+FED = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                learning_rate=1e-2)
+
+
+def _metric_fn(model):
+    hold = next(_client_iter(9))
+    return lambda p: -model.loss_fn(p, hold)
+
+
+def _assert_trees_bitwise_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# Frozen pre-refactor strategy bodies (the monolithic callables exactly as
+# they stood before the plan IR). Do NOT "modernize" these — they are the
+# equivalence oracle.
+# ---------------------------------------------------------------------------
+
+def _eval(exp, params):
+    return float(exp.eval_fn(params)) if exp.eval_fn is not None else None
+
+
+def legacy_fedelmy(exp):
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    order = exp.resolved_order()
+    m = (exp.init_params if exp.init_params is not None
+         else exp.model.init(exp.resolved_key()))
+    m, _ = trainer.train(m, exp.client_iters[order[0]], exp.fed.e_warmup)
+    clients = []
+    pool = None
+    for rank, ci in enumerate(order):
+        m, pool, models = trainer.local_client_train(
+            m, exp.client_iters[ci], on_model_end=exp.callbacks.on_model_end)
+        rec = ClientRecord(client=int(ci), rank=rank, models=models,
+                           global_metric=_eval(exp, m))
+        clients.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m)
+    return StrategyOutput(params=m, clients=clients, final_pool=pool)
+
+
+def legacy_fedelmy_fewshot(exp):
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m = exp.model.init(exp.resolved_key())
+    m, _ = trainer.train(m, exp.client_iters[0], exp.fed.e_warmup)
+    rounds = []
+    pool = None
+    for r in range(exp.shots):
+        for ci in range(len(exp.client_iters)):
+            m, pool, _ = trainer.local_client_train(m, exp.client_iters[ci])
+        rec = RoundRecord(round=r, global_metric=_eval(exp, m))
+        rounds.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m)
+    return StrategyOutput(params=m, rounds=rounds, final_pool=pool)
+
+
+def legacy_fedelmy_pfl(exp):
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    n = len(exp.client_iters)
+    avgs, clients = [], []
+    for ci, keyc in enumerate(jax.random.split(exp.resolved_key(), n)):
+        m0 = exp.model.init(keyc)
+        m0, _ = trainer.train(m0, exp.client_iters[ci], exp.fed.e_warmup)
+        m_avg, _, models = trainer.local_client_train(
+            m0, exp.client_iters[ci],
+            on_model_end=exp.callbacks.on_model_end)
+        avgs.append(m_avg)
+        rec = ClientRecord(client=ci, rank=ci, models=models)
+        clients.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m_avg)
+    return StrategyOutput(params=tree_mean(avgs), clients=clients)
+
+
+def legacy_fedseq(exp):
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m = (exp.init_params if exp.init_params is not None
+         else exp.model.init(exp.resolved_key()))
+    clients = []
+    for rank, ci in enumerate(exp.resolved_order()):
+        m, _ = trainer.train(m, exp.client_iters[ci], exp.fed.e_local)
+        rec = ClientRecord(client=int(ci), rank=rank,
+                           global_metric=_eval(exp, m))
+        clients.append(rec)
+        if exp.callbacks.on_client_end is not None:
+            exp.callbacks.on_client_end(rec, m)
+    return StrategyOutput(params=m, clients=clients)
+
+
+def legacy_dfedavgm(exp):
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed,
+                           optimizer="momentum",
+                           learning_rate=exp.fed.learning_rate * 10)
+    m0 = exp.model.init(exp.resolved_key())
+    locals_ = [trainer.train(m0, it, exp.fed.e_local)[0]
+               for it in exp.client_iters]
+    return StrategyOutput(params=tree_mean(locals_))
+
+
+def legacy_dfedsam(exp):
+    rho = exp.strategy_options.get("rho", 0.05)
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed,
+                           optimizer="sgd",
+                           learning_rate=exp.fed.learning_rate * 10)
+    loss_fn, opt = exp.model.loss_fn, trainer.opt
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def sam_step(params, opt_state, batch, s):
+        return (*sam_update(loss_fn, params, batch, opt, opt_state, s,
+                            rho=rho), 0.0)
+
+    m0 = exp.model.init(exp.resolved_key())
+    locals_ = [trainer.train(m0, it, exp.fed.e_local, step_fn=sam_step)[0]
+               for it in exp.client_iters]
+    return StrategyOutput(params=tree_mean(locals_))
+
+
+def legacy_metafed(exp):
+    anchor_beta = exp.strategy_options.get("anchor_beta", 0.5)
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m = exp.model.init(exp.resolved_key())
+    for it in exp.client_iters:                   # pass 1
+        m, _ = trainer.train(m, it, exp.fed.e_local // 2)
+    common = m
+
+    def anchored_loss(params, batch):
+        task = exp.model.loss_fn(params, batch)
+        d = d2_anchor_distance(params, common, "l2")
+        return task + anchor_beta * log_scale(d, task)
+
+    anchored = make_plain_step(anchored_loss, trainer.opt)
+    for it in exp.client_iters:                   # pass 2
+        m, _ = trainer.train(m, it, exp.fed.e_local // 2, step_fn=anchored)
+    return StrategyOutput(params=m)
+
+
+def legacy_local_only(exp):
+    client = exp.strategy_options.get("client", 0)
+    trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+    m, _ = trainer.train(exp.model.init(exp.resolved_key()),
+                         exp.client_iters[client], exp.fed.e_local)
+    return StrategyOutput(params=m)
+
+
+LEGACY = {
+    "fedelmy": legacy_fedelmy,
+    "fedelmy_fewshot": legacy_fedelmy_fewshot,
+    "fedelmy_pfl": legacy_fedelmy_pfl,
+    "fedseq": legacy_fedseq,
+    "dfedavgm": legacy_dfedavgm,
+    "dfedsam": legacy_dfedsam,
+    "metafed": legacy_metafed,
+    "local_only": legacy_local_only,
+}
+
+
+# ---------------------------------------------------------------------------
+# 1. Pre-refactor equivalence: interpreter == frozen monolithic bodies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(LEGACY))
+def test_plan_interpreter_matches_prerefactor_strategy(name):
+    """Every registered plan reproduces its pre-refactor monolithic body
+    bit-for-bit on a fixed seed: params, client/round records, final pool."""
+    model = _tiny_model()
+    metric = _metric_fn(model)
+    kw = dict(model=model, fed=FED, key=KEY, eval_fn=metric)
+    if name == "fedelmy_fewshot":
+        kw["shots"] = 2
+
+    old = LEGACY[name](Experiment(client_iters=_iters(), **kw))
+    new = run(Experiment(client_iters=_iters(), strategy=name, **kw))
+
+    _assert_trees_bitwise_equal(old.params, new.params, name)
+    assert len(new.clients) == len(old.clients), name
+    for a, b in zip(old.clients, new.clients):
+        assert (a.client, a.rank) == (b.client, b.rank)
+        assert a.global_metric == b.global_metric
+        assert [m.index for m in a.models] == [m.index for m in b.models]
+        assert [m.task_loss for m in a.models] == \
+            [m.task_loss for m in b.models]
+    assert len(new.rounds) == len(old.rounds), name
+    for a, b in zip(old.rounds, new.rounds):
+        assert (a.round, a.global_metric) == (b.round, b.global_metric)
+    if old.final_pool is not None:
+        _assert_trees_bitwise_equal(old.final_pool.members,
+                                    new.final_pool.members, name)
+    else:
+        assert new.final_pool is None, name
+
+
+def test_plan_equivalence_with_order_init_and_options():
+    """Optional Experiment fields flow through the interpreter exactly as
+    through the pre-refactor bodies: order + init_params (fedelmy/fedseq),
+    rho (dfedsam), anchor_beta (metafed), client (local_only)."""
+    model = _tiny_model()
+    init = model.init(jax.random.PRNGKey(7))
+    cases = [
+        ("fedelmy", dict(order=[1, 0], init_params=init)),
+        ("fedseq", dict(order=[1, 0, 1], init_params=init)),
+        ("dfedsam", dict(strategy_options={"rho": 0.11})),
+        ("metafed", dict(strategy_options={"anchor_beta": 0.9})),
+        ("local_only", dict(strategy_options={"client": 1})),
+    ]
+    for name, kw in cases:
+        exp = lambda: Experiment(model=model, client_iters=_iters(),  # noqa: E731
+                                 fed=FED, strategy=name, key=KEY, **kw)
+        old = LEGACY[name](exp())
+        new = run(exp())
+        _assert_trees_bitwise_equal(old.params, new.params, name)
+
+
+# ---------------------------------------------------------------------------
+# 2. Plan topology properties
+# ---------------------------------------------------------------------------
+
+@given(perm=st.permutations(list(range(3))),
+       strategy=st.sampled_from(["fedelmy", "fedseq"]))
+@settings(max_examples=6, deadline=None)
+def test_chain_plans_honor_order_permutations(perm, strategy):
+    """Property: a chain plan visits exactly the `order` permutation (the
+    ClientRecord sequence pins it), and a batched pair of runs with
+    *different* per-run permutations still matches sequential bit-for-bit."""
+    model = _tiny_model()
+    perm = list(perm)
+    rotated = perm[1:] + perm[:1]
+    mk = lambda order: Experiment(                      # noqa: E731
+        model=model, client_iters=_iters(3), fed=FED, strategy=strategy,
+        key=KEY, order=order)
+    seq = [run(mk(perm)), run(mk(rotated))]
+    assert [c.client for c in seq[0].clients] == perm
+    assert [c.rank for c in seq[0].clients] == [0, 1, 2]
+    batch = run_batch(experiments=[mk(perm), mk(rotated)])
+    assert batch.n_compiled_groups == 1
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params,
+                                    f"{strategy} {perm}")
+        assert [c.client for c in b.clients] == [c.client for c in s.clients]
+
+
+def test_ring_plan_ignores_order_and_warns():
+    """Ring topology visits 0..N-1 regardless of `order` (and the engine
+    warns that the field is ignored)."""
+    model = _tiny_model()
+    with pytest.warns(UserWarning, match="ignores Experiment.order"):
+        res = run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                             strategy="fedelmy_fewshot", key=KEY,
+                             order=[1, 0], shots=1))
+    with_order = res.params
+    plain = run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                           strategy="fedelmy_fewshot", key=KEY,
+                           shots=1)).params
+    _assert_trees_bitwise_equal(with_order, plain)
+
+
+def test_every_plan_strategy_compiles_to_one_group():
+    """Invariant: a 3-seed sweep of ANY plan strategy is exactly one
+    compiled group — including metafed / fewshot / pfl / local_only, which
+    pre-IR fell back to per-run sequential execution."""
+    model = _tiny_model()
+    for name in list_strategies():
+        assert get_plan(name) is not None, name
+        batch = run_batch(
+            Experiment(model=model, client_iters=_iters(), fed=FED,
+                       strategy=name,
+                       shots=2 if name == "fedelmy_fewshot" else 1),
+            axes=BatchAxes(seeds=[0, 1, 2],
+                           client_iters_for_seed=lambda s: _iters()))
+        assert batch.n_compiled_groups == 1, name
+        assert len(batch) == 3, name
+
+
+def test_shots_split_ring_groups():
+    """`shots` is loop structure for ring plans: runs with different shot
+    counts cannot share a compiled program."""
+    model = _tiny_model()
+    mk = lambda shots: Experiment(                      # noqa: E731
+        model=model, client_iters=_iters(), fed=FED,
+        strategy="fedelmy_fewshot", key=KEY, shots=shots)
+    batch = run_batch(experiments=[mk(1), mk(2), mk(1)])
+    # shots=1 runs batch together; the shots=2 singleton falls back
+    assert batch.n_compiled_groups == 2
+    _assert_trees_bitwise_equal(batch[0].params, batch[2].params)
+
+
+def test_readme_strategy_table_matches_registry():
+    """The README strategy table is generated from `strategy_table()`;
+    registering or reshaping a plan without regenerating it fails here."""
+    import pathlib
+
+    from repro.api import strategy_table
+    readme = (pathlib.Path(__file__).resolve().parent.parent /
+              "README.md").read_text()
+    assert strategy_table() in readme, (
+        "README strategy table is stale — paste the output of "
+        "repro.api.strategy_table() between the strategy-table markers")
+
+
+def test_plan_metadata_describes_topologies():
+    from repro.api import describe_strategies
+    d = describe_strategies()
+    assert d["fedelmy"]["topology"] == "chain"
+    assert d["fedelmy_fewshot"]["topology"] == "ring×shots"
+    assert d["fedelmy_pfl"]["topology"] == "independent"
+    assert d["metafed"]["local_block"] == "plain → anchored"
+    assert d["dfedavgm"]["aggregate"] == "tree_mean"
+    assert all(v["batched"] == "yes" for v in d.values())
+
+
+# ---------------------------------------------------------------------------
+# 3. IR validation
+# ---------------------------------------------------------------------------
+
+def test_malformed_plans_fail_at_construction():
+    with pytest.raises(ValueError, match="topology"):
+        Topology("mesh")
+    with pytest.raises(ValueError, match="local block"):
+        LocalBlock("sam")
+    with pytest.raises(ValueError, match="step_factory"):
+        LocalBlock("custom")
+    with pytest.raises(ValueError, match="e_local"):
+        LocalBlock("pool", epochs_div=2)   # pool owns its step budget
+    with pytest.raises(ValueError, match="aggregate"):
+        StrategyPlan(topology=Topology("chain"),
+                     phases=(LocalBlock("plain"),), aggregate="median")
+    with pytest.raises(ValueError, match="at least one phase"):
+        StrategyPlan(topology=Topology("chain"), phases=())
+    with pytest.raises(ValueError, match="single-phase"):
+        StrategyPlan(topology=Topology("independent"),
+                     phases=(LocalBlock("plain"), LocalBlock("plain")),
+                     broadcast="shared_init")
+    with pytest.raises(ValueError, match="hand off"):
+        StrategyPlan(topology=Topology("independent"),
+                     phases=(LocalBlock("plain"),))
+    with pytest.raises(ValueError, match="handoff"):
+        StrategyPlan(topology=Topology("chain"),
+                     phases=(LocalBlock("plain"),), broadcast="shared_init")
+
+
+def test_registered_custom_callable_still_runs_sequentially():
+    """`register_strategy` keeps accepting opaque callables; they run via
+    the engine but never batch (plan is None → sequential fallback)."""
+    from repro.api import register_strategy
+    from repro.api.strategies import STRATEGIES
+    name = "test_opaque_strategy"
+
+    @register_strategy(name)
+    def opaque(exp):
+        trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
+        m, _ = trainer.train(exp.model.init(exp.resolved_key()),
+                             exp.client_iters[0], 1)
+        return StrategyOutput(params=m)
+
+    try:
+        model = _tiny_model()
+        res = run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                             strategy=name, key=KEY))
+        assert all(bool(jnp.isfinite(x).all())
+                   for x in jax.tree.leaves(res.params))
+        batch = run_batch(
+            Experiment(model=model, client_iters=_iters(), fed=FED,
+                       strategy=name),
+            axes=BatchAxes(seeds=[0, 1],
+                           client_iters_for_seed=lambda s: _iters()))
+        assert batch.n_compiled_groups == 2  # plan-less: per-run fallback
+    finally:                   # don't leak into other modules' registry scans
+        STRATEGIES._items.pop(name, None)
