@@ -94,11 +94,16 @@ def bench_spec(name: str, **overrides):
 
 def setup_from_spec(spec, seed=0, model=None):
     """(model, iters, acc_fn) from a materialized scenario — the common
-    shape every tableX benchmark consumes."""
+    shape every tableX benchmark consumes. `iters` are `DataPlan`s
+    (device-resident shards) with scan=False: these setups train the
+    paper CNN, whose convolutions inside a scan body hit XLA CPU's slow
+    in-loop conv lowering — the per-step dispatch path over the resident
+    arrays is the fast configuration here (DESIGN.md §9)."""
     if model is None:
         model = build_model(get_arch("paper-cnn"))
     data = materialize(spec, seed)
-    return model, data.iterators(), _acc_fn(model, data.eval_dataset())
+    return model, data.iterators(scan=False), _acc_fn(model,
+                                                      data.eval_dataset())
 
 
 def label_skew_setup(n_clients=4, beta=0.3, seed=0):
@@ -164,8 +169,9 @@ def probe_mlp_setup(n_clients=4, beta=0.3, seed=0, width=64, batch=16):
     data = materialize(spec, seed)
 
     def iters_for_run(i):
-        # same seeds for every run: fresh iterator objects per call, but an
-        # identical batch stream, so grid runs differ ONLY in (α, β)
+        # same seeds for every run: fresh DataPlan cursors per call over
+        # the one device-resident upload, an identical batch stream per
+        # run, so grid runs differ ONLY in (α, β)
         return data.iterators()
 
     return model, iters_for_run, _acc_fn(model, data.eval_dataset())

@@ -1,0 +1,71 @@
+"""local_phase micro-benchmark: scan-compiled vs iterator local phase.
+
+The paper's inner loop (Alg. 1 lines 3-17: S pool models × e_local
+regularized steps) was dispatch-bound — one jitted dispatch plus a host
+batch upload per SGD step (BENCH_baseline pre-PR5). The DataPlan +
+`lax.scan` path compiles a client's whole local phase into ONE program
+with jit-internal batch gathers. This benchmark runs both paths on the
+dispatch-bound probe MLP and reports steps/sec each way; the derived
+`speedup` is the acceptance metric (≥ 2× scanned over iterator) and
+scripts/bench_compare.py gates the total wall time against
+BENCH_baseline.json like every other benchmark.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import bench_spec, emit_csv, fed_config, \
+    probe_mlp_model
+from repro.api import LocalTrainer
+from repro.scenarios import materialize
+
+REPEATS = 12
+
+
+def _time_phases(phase_fn, repeats: int) -> float:
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = phase_fn()
+    jax.block_until_ready(out)
+    return time.time() - t0
+
+
+def run():
+    t0 = time.time()
+    model = probe_mlp_model()
+    fed = fed_config(n_clients=2)
+    spec = bench_spec("dir_label_skew", n_clients=2,
+                      partitioner_params={"beta": 0.3}, batch_size=16)
+    data = materialize(spec, 0)
+    trainer = LocalTrainer(model.loss_fn, fed)
+    m0 = model.init(jax.random.PRNGKey(0))
+    steps_per_phase = fed.pool_size * fed.e_local
+
+    it = data.batch_iterators()[0]
+    plan = data.iterators()[0]
+
+    # compile + warm both paths before timing
+    jax.block_until_ready(trainer.local_client_train(m0, it)[0])
+    jax.block_until_ready(trainer.local_client_train_scanned(m0, plan)[0])
+
+    t_iter = _time_phases(
+        lambda: trainer.local_client_train(m0, it)[0], REPEATS)
+    t_scan = _time_phases(
+        lambda: trainer.local_client_train_scanned(m0, plan)[0], REPEATS)
+
+    iter_sps = REPEATS * steps_per_phase / t_iter
+    scan_sps = REPEATS * steps_per_phase / t_scan
+    speedup = scan_sps / iter_sps
+    print(f"local_phase: iterator {iter_sps:.0f} steps/s, "
+          f"scanned {scan_sps:.0f} steps/s, speedup {speedup:.2f}x",
+          flush=True)
+    emit_csv("local_phase", t0,
+             f"scanned_steps_per_s={scan_sps:.0f};"
+             f"iter_steps_per_s={iter_sps:.0f};speedup={speedup:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -23,7 +23,7 @@ import traceback
 BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
               "table4_order", "fig5_comm_cost", "fig6_compute_matched",
               "fig9_distance_measures", "fig10_pool_heatmap", "table9_pfl",
-              "scenario_grid", "roofline_report")
+              "scenario_grid", "local_phase", "roofline_report")
 
 
 def _list() -> None:
@@ -56,7 +56,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced scale (smoke)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="benchmark name, or a comma-separated list")
     ap.add_argument("--list", action="store_true",
                     help="list registered benchmarks/strategies and exit")
     ap.add_argument("--json", default=None, metavar="OUT",
@@ -71,9 +72,10 @@ def main() -> None:
     if args.quick:
         common.set_scale("quick")
 
-    if args.only is not None and args.only not in BENCHMARKS:
-        ap.error(f"unknown benchmark {args.only!r}; see --list")
-    names = [args.only] if args.only else list(BENCHMARKS)
+    names = args.only.split(",") if args.only else list(BENCHMARKS)
+    unknown = [n for n in names if n not in BENCHMARKS]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown!r}; see --list")
     suite = {name: importlib.import_module(f"benchmarks.{name}").run
              for name in names}
     print("name,us_per_call,derived")

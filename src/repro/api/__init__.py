@@ -22,7 +22,11 @@ Two entry points, three registries, one IR:
   ``FedConfig.pool_backend``.
 
 ``LocalTrainer`` owns the optimizer and compiled local steps (the old
-``train_steps.opt`` function-attribute state is gone).
+``train_steps.opt`` function-attribute state is gone). Experiments whose
+client streams are ``repro.data.DataPlan``s (device-resident shards)
+execute each local phase as ONE scan-compiled program instead of a
+dispatch per SGD step — bit-identical results, no host round-trips
+(DESIGN.md §9).
 """
 from repro.api.batch import BatchAxes, run_batch
 from repro.api.engine import Callbacks, Experiment, run

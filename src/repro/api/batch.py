@@ -15,9 +15,14 @@ one jitted program.
                                      client_iters_for_seed=make_iters))
     batch[0].params        # per-run RunResult, bit-identical to api.run
 
-Every run must own its iterator objects (stateful streams cannot be
-shared across runs of a batch — the engine rejects sharing); the
-BatchAxes factories exist for exactly that.
+Every run must own its stream objects — a `batch_iterator`'s position
+and a `DataPlan`'s shuffle cursor are equally stateful, so neither may
+be shared across runs of a batch (the engine rejects sharing); the
+BatchAxes factories exist for exactly that. Sharing the *device arrays*
+under several DataPlans is free and encouraged. When every stream of a
+group is a scan-routed DataPlan, the group's local phases run
+scan-compiled with stacked index tensors (one program per phase,
+DESIGN.md §9; conv models pass scan=False and keep per-step dispatch).
 
 Grouping rules (see DESIGN.md §6, §8):
 

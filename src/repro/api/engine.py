@@ -43,9 +43,17 @@ class Callbacks:
 @dataclasses.dataclass
 class Experiment:
     """A fully-specified federated run. `strategy` names a registered
-    strategy; `fed.pool_backend` names a registered pool representation."""
+    strategy; `fed.pool_backend` names a registered pool representation.
+
+    `client_iters` entries are per-client infinite batch streams: either
+    plain iterators (`repro.data.batch_iterator`) or device-resident
+    `repro.data.DataPlan`s — scan-routed plan visits execute as one
+    compiled program per local phase (DESIGN.md §9) with bit-identical
+    results; custom-step blocks, callback runs and `scan=False` plans
+    (conv models on CPU) consume the same cursor via the per-step
+    path."""
     model: Any                        # repro.models.Model (init/loss_fn/...)
-    client_iters: Sequence[Any]       # per-client infinite batch iterators
+    client_iters: Sequence[Any]       # per-client streams (see docstring)
     fed: FedConfig
     strategy: str = "fedelmy"
     key: Optional[jax.Array] = None   # default: PRNGKey(fed.seed)

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.api.results import ClientRecord, RoundRecord, StrategyOutput
 from repro.api.trainer import LocalTrainer, stack_trees, unstack_tree
+from repro.data.plan import (all_want_scan, stack_plan_arrays, wants_scan)
 
 PyTree = Any
 
@@ -57,11 +58,20 @@ _RECORDS = ("none", "clients", "clients_noeval", "rounds")
 
 
 def tree_mean(trees: Sequence[PyTree]) -> PyTree:
-    """Leaf-wise mean of structurally identical pytrees (f32 accumulate,
-    cast back) — the one-shot averaging aggregate."""
-    return jax.tree.map(
-        lambda *xs: jnp.mean(jnp.stack([x.astype(jnp.float32) for x in xs]),
-                             axis=0).astype(xs[0].dtype), *trees)
+    """Leaf-wise mean of structurally identical pytrees — the one-shot
+    averaging aggregate. A running left-to-right f32 accumulation: the
+    former stack-then-mean materialized N f32 copies of every leaf before
+    reducing; this keeps one f32 accumulator (O(1) extra memory) and is
+    deterministic in the input order. (XLA's stacked reduce reassociates
+    the sum, so the two orders differ in final mantissa bits; the running
+    fold is now the defining spec, pinned in tests/test_dataplan.py.)"""
+    def mean_leaf(*xs):
+        acc = xs[0].astype(jnp.float32)
+        for x in xs[1:]:
+            acc = acc + x.astype(jnp.float32)
+        return (acc / len(xs)).astype(xs[0].dtype)
+
+    return jax.tree.map(mean_leaf, *trees)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -264,12 +274,31 @@ def interpret(experiment, plan: StrategyPlan) -> StrategyOutput:
     return _interpret_sequenced(experiment, plan, trainer)
 
 
+def _train_visit(trainer: LocalTrainer, m: PyTree, it, n_steps: int):
+    """Plain training over one client stream: scan-routed DataPlans
+    compile the whole visit into one scan; iterators (and scan=False
+    plans) keep the per-step loop."""
+    if wants_scan(it):
+        m, _ = trainer.train_scanned(m, it, n_steps)
+    else:
+        m, _ = trainer.train(m, it, n_steps)
+    return m
+
+
 def _run_block(trainer: LocalTrainer, block: LocalBlock, m: PyTree, it,
                step_fn, exp):
-    """One client visit: returns (params, pool | None, model records)."""
+    """One client visit: returns (params, pool | None, model records).
+    Device-resident DataPlans route through the scan-compiled phase —
+    custom blocks and per-model callbacks keep the per-step iterator path
+    (a DataPlan still serves it, through the same cursor)."""
     if block.kind == "pool":
+        if wants_scan(it) and exp.callbacks.on_model_end is None:
+            return trainer.local_client_train_scanned(m, it)
         return trainer.local_client_train(
             m, it, on_model_end=exp.callbacks.on_model_end)
+    if block.kind == "plain" and wants_scan(it):
+        m, _ = trainer.train_scanned(m, it, block.n_steps(trainer.fed))
+        return m, None, []
     m, _ = trainer.train(m, it, block.n_steps(trainer.fed), step_fn=step_fn)
     return m, None, []
 
@@ -283,7 +312,8 @@ def _interpret_sequenced(exp, plan: StrategyPlan,
     cycles = plan.topology.resolved_cycles(exp)
     m = _resolved_init(exp, plan)
     if _wants_warmup(exp, plan):
-        m, _ = trainer.train(m, exp.client_iters[schedule[0]], fed.e_warmup)
+        m = _train_visit(trainer, m, exp.client_iters[schedule[0]],
+                         fed.e_warmup)
 
     clients: List[ClientRecord] = []
     rounds: List[RoundRecord] = []
@@ -339,7 +369,7 @@ def _interpret_independent(exp, plan: StrategyPlan,
     for ci, m0 in zip(sel, inits):
         it = exp.client_iters[ci]
         if plan.warmup == "per_client":
-            m0, _ = trainer.train(m0, it, fed.e_warmup)
+            m0 = _train_visit(trainer, m0, it, fed.e_warmup)
         m, _, models = _run_block(trainer, block, m0, it, step_fn, exp)
         outs.append(m)
         if plan.records == "clients_noeval":
@@ -372,6 +402,50 @@ def _stacked_inits(exps, plan: StrategyPlan, mesh) -> PyTree:
     return _shard(stack_trees([_resolved_init(e, plan) for e in exps]), mesh)
 
 
+class _StackedArrays:
+    """Per-interpretation cache of stacked (and zero-padded) DataPlan
+    arrays: a chain revisits the same B plans once per cycle and phase —
+    stack once, reuse the device buffer for every visit. Every stack pads
+    to the longest shard among the group's *visited* streams, not the
+    visit's own: one padded shape means the whole-phase scanned programs
+    compile ONCE per group even when client ranks carry different shard
+    lengths (quantity skew), instead of once per distinct (B, n, …)
+    shape."""
+
+    def __init__(self, streams):
+        self._cache: Dict[tuple, PyTree] = {}
+        ns = [it.n for it in streams if wants_scan(it)]
+        self._pad_to = max(ns) if ns else None
+
+    def get(self, plans) -> PyTree:
+        key = tuple(id(p) for p in plans)
+        if key not in self._cache:
+            self._cache[key] = stack_plan_arrays(plans,
+                                                 pad_to=self._pad_to)
+        return self._cache[key]
+
+
+def _batched_visit(trainer: LocalTrainer, m: PyTree, its, n_steps: int,
+                   stacks: _StackedArrays, step_fn=None) -> PyTree:
+    """One batched plain/custom visit: all-DataPlan groups run the whole
+    visit as one vmapped scan (stacked index tensors, no per-step host
+    stack_trees re-upload); anything else keeps the per-step loop."""
+    if step_fn is None and all_want_scan(its):
+        m, _ = trainer.train_scanned_batched(m, its, n_steps,
+                                             arrays=stacks.get(its))
+    else:
+        m, _ = trainer.train_batched(m, its, n_steps, step_fn=step_fn)
+    return m
+
+
+def _batched_pool_visit(trainer: LocalTrainer, m: PyTree, its,
+                        alphas, betas, stacks: _StackedArrays):
+    if all_want_scan(its):
+        return trainer.local_client_train_scanned_batched(
+            m, its, alphas, betas, arrays=stacks.get(its))
+    return trainer.local_client_train_batched(m, its, alphas, betas)
+
+
 def _interpret_sequenced_batched(exps, plan: StrategyPlan,
                                  trainer: LocalTrainer,
                                  mesh) -> List[StrategyOutput]:
@@ -379,10 +453,13 @@ def _interpret_sequenced_batched(exps, plan: StrategyPlan,
     schedules = [plan.topology.schedule(e) for e in exps]
     cycles = plan.topology.resolved_cycles(exps[0])
     alphas, betas = _alphas_betas(exps)
+    stacks = _StackedArrays([e.client_iters[ci]
+                             for e, s in zip(exps, schedules)
+                             for ci in s])
     m = _stacked_inits(exps, plan, mesh)
     if _wants_warmup(exps[0], plan):
         warm = [e.client_iters[s[0]] for e, s in zip(exps, schedules)]
-        m, _ = trainer.train_batched(m, warm, fed.e_warmup)
+        m = _batched_visit(trainer, m, warm, fed.e_warmup, stacks)
 
     clients: List[List[ClientRecord]] = [[] for _ in exps]
     rounds: List[List[RoundRecord]] = [[] for _ in exps]
@@ -396,11 +473,11 @@ def _interpret_sequenced_batched(exps, plan: StrategyPlan,
                 its = [e.client_iters[s[rank]]
                        for e, s in zip(exps, schedules)]
                 if block.kind == "pool":
-                    m, pools, recs = trainer.local_client_train_batched(
-                        m, its, alphas, betas)
+                    m, pools, recs = _batched_pool_visit(
+                        trainer, m, its, alphas, betas, stacks)
                 else:
-                    m, _ = trainer.train_batched(m, its, block.n_steps(fed),
-                                                 step_fn=step_fn)
+                    m = _batched_visit(trainer, m, its, block.n_steps(fed),
+                                       stacks, step_fn=step_fn)
                     recs = [[] for _ in exps]
                 if plan.records == "clients":
                     for i, e in enumerate(exps):
@@ -440,20 +517,22 @@ def _interpret_independent_batched(exps, plan: StrategyPlan,
         inits = [m0 for m0 in m0s for _ in sel]
     flat = _shard(stack_trees(inits), mesh)
     flat_iters = [e.client_iters[c] for e in exps for c in sel]
+    stacks = _StackedArrays(flat_iters)
     if plan.warmup == "per_client":
-        flat, _ = trainer.train_batched(flat, flat_iters, fed.e_warmup)
+        flat = _batched_visit(trainer, flat, flat_iters, fed.e_warmup,
+                              stacks)
 
     block = plan.phases[0]
     recs: List[List[Any]] = [[] for _ in flat_iters]
     if block.kind == "pool":
         alphas, betas = _alphas_betas(exps, repeat=n_sel)
-        flat, _, recs = trainer.local_client_train_batched(
-            flat, flat_iters, alphas, betas)
+        flat, _, recs = _batched_pool_visit(trainer, flat, flat_iters,
+                                            alphas, betas, stacks)
     else:
         step_fn = (block.batched_step_factory(trainer, exps, None)
                    if block.kind == "custom" else None)
-        flat, _ = trainer.train_batched(flat, flat_iters, block.n_steps(fed),
-                                        step_fn=step_fn)
+        flat = _batched_visit(trainer, flat, flat_iters, block.n_steps(fed),
+                              stacks, step_fn=step_fn)
 
     outs: List[StrategyOutput] = []
     for i, e in enumerate(exps):

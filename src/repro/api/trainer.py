@@ -16,11 +16,14 @@ from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.pools import PoolBackend, backend_for
 from repro.api.results import ModelRecord
 from repro.configs.base import FedConfig
 from repro.core import distances as D
+from repro.data.plan import (DataPlan, stack_plan_arrays,
+                             stack_plan_indices)
 from repro.optim import make_optimizer
 from repro.optim.optimizers import Optimizer
 
@@ -143,12 +146,88 @@ def make_batched_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
                    donate_argnums=(0, 1))
 
 
+# ---------------------------------------------------------------------------
+# Scan-compiled variants: the whole local phase as ONE program. Batches are
+# jit-internal gathers from a DataPlan's device-resident arrays (indexed by
+# its precomputed shuffle schedule), so the dispatch-per-step and the
+# host→device upload per batch both disappear. The step bodies are the same
+# graphs the per-step functions trace, rolled into `lax.scan` — bit-identity
+# with the iterator path is the acceptance contract (tests/test_dataplan.py).
+# ---------------------------------------------------------------------------
+
+def _gather(arrays: PyTree, row: jax.Array) -> PyTree:
+    return jax.tree.map(lambda a: a[row], arrays)
+
+
+def _scan_steps(task_and_grads: Callable, opt: Optimizer, params: PyTree,
+                arrays: PyTree, idx: jax.Array):
+    """Shared scan over (n_steps, batch) index rows from a fresh optimizer
+    state — the one step body every scanned core runs: gather the batch,
+    take (task, grads), apply the optimizer. Returns (params, (n,) tasks)."""
+    def body(carry, si):
+        p, o = carry
+        s, row = si
+        task, grads = task_and_grads(p, _gather(arrays, row))
+        p, o = opt.update(p, grads, o, s)
+        return (p, o), task
+
+    (params, _), tasks = jax.lax.scan(
+        body, (params, opt.init(params)), (jnp.arange(idx.shape[0]), idx))
+    return params, tasks
+
+
+def _scanned_train_core(loss_fn: Callable, opt: Optimizer) -> Callable:
+    """(params, arrays, idx) → (params, last task): `make_plain_step`'s body
+    scanned over the (n_steps, batch) index rows."""
+
+    def core(params, arrays, idx):
+        params, tasks = _scan_steps(jax.value_and_grad(loss_fn), opt,
+                                    params, arrays, idx)
+        return params, tasks[-1]
+
+    return core
+
+
+def _scanned_local_core(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
+                        backend: PoolBackend) -> Callable:
+    """(m_in, arrays, idx, α, β) → (pool average, pool, (S,) tasks): the
+    paper's entire local procedure (Alg. 1 lines 3–17) as a scan over pool
+    slots nested around a scan over steps. The pool pytree is the outer
+    carry (fixed-capacity NamedTuple — structure is static), so S × e_local
+    dispatches collapse into one compiled program. α/β ride traced, like
+    the batched steps — same bits as the baked constants."""
+    full_loss = hp_regularized_loss(loss_fn, fed, backend)
+
+    def core(m_in, arrays, idx, alpha, beta):
+        # idx: (S, e_local, batch)
+        def slot(pool, idx_j):
+            def task_and_grads(p, batch):
+                (_, task), grads = jax.value_and_grad(
+                    lambda p_: full_loss(p_, batch, pool, alpha, beta),
+                    has_aux=True)(p)
+                return task, grads
+
+            m, tasks = _scan_steps(task_and_grads, opt,
+                                   pool.average(),     # Eq. 6 init
+                                   arrays, idx_j)
+            return pool.append(m), tasks[-1]
+
+        pool, tasks = jax.lax.scan(slot, backend.create(m_in, fed), idx)
+        return pool.average(), pool, tasks
+
+    return core
+
+
 class _CompiledSteps(NamedTuple):
     opt: Optimizer
     pool_step: Callable
     plain_step: Callable
     batched_pool_step: Callable
     batched_plain_step: Callable
+    scanned_plain: Callable
+    scanned_local: Callable
+    batched_scanned_plain: Callable
+    batched_scanned_local: Callable
 
 
 class StepKey(NamedTuple):
@@ -179,13 +258,21 @@ def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
                     backend: PoolBackend) -> _CompiledSteps:
     def build():
         opt = make_optimizer(opt_name, lr, wd)
+        plain_core = _scanned_train_core(loss_fn, opt)
+        local_core = _scanned_local_core(loss_fn, fed, opt, backend)
         return _CompiledSteps(
             opt=opt,
             pool_step=make_pool_step(loss_fn, fed, opt, backend),
             plain_step=make_plain_step(loss_fn, opt),
             batched_pool_step=make_batched_pool_step(loss_fn, fed, opt,
                                                      backend),
-            batched_plain_step=make_batched_plain_step(loss_fn, opt))
+            batched_plain_step=make_batched_plain_step(loss_fn, opt),
+            scanned_plain=jax.jit(plain_core),
+            scanned_local=jax.jit(local_core),
+            batched_scanned_plain=jax.jit(
+                jax.vmap(plain_core, in_axes=(0, 0, 0))),
+            batched_scanned_local=jax.jit(
+                jax.vmap(local_core, in_axes=(0, 0, 0, 0, 0))))
 
     key = StepKey(loss_fn, fed, opt_name, lr, wd, backend.name)
     try:
@@ -237,6 +324,10 @@ class LocalTrainer:
         self.plain_step = compiled.plain_step
         self.batched_pool_step = compiled.batched_pool_step
         self.batched_plain_step = compiled.batched_plain_step
+        self.scanned_plain = compiled.scanned_plain
+        self.scanned_local = compiled.scanned_local
+        self.batched_scanned_plain = compiled.batched_scanned_plain
+        self.batched_scanned_local = compiled.batched_scanned_local
         self._batched_opt_init = jax.jit(jax.vmap(self.opt.init))
         self._batched_pool_create = jax.jit(
             jax.vmap(lambda m: self.backend.create(m, self.fed)))
@@ -245,10 +336,14 @@ class LocalTrainer:
 
     def train(self, params: PyTree, data_iter, n_steps: int, *,
               pool: Any = None,
-              step_fn: Optional[Callable] = None) -> Tuple[PyTree, float]:
+              step_fn: Optional[Callable] = None
+              ) -> Tuple[PyTree, jax.Array]:
         """Run n_steps of SGD from a fresh optimizer state. With `pool`,
         uses the regularized step; `step_fn` overrides the step entirely
-        (signature (params, opt_state, batch, step), e.g. a SAM step)."""
+        (signature (params, opt_state, batch, step), e.g. a SAM step).
+        The returned task loss is a jax scalar — converting it blocks on
+        the device, so callers defer `float()` to record-construction
+        time (a per-call sync here serializes every dispatch)."""
         params = jax.tree.map(jnp.copy, params)   # steps donate buffers
         opt_state = self.opt.init(params)
         task = jnp.zeros(())
@@ -263,7 +358,17 @@ class LocalTrainer:
             else:
                 params, opt_state, task = self.pool_step(
                     params, opt_state, batch, pool, jnp.int32(s))
-        return params, float(task)
+        return params, task
+
+    def train_scanned(self, params: PyTree, plan: DataPlan,
+                      n_steps: int) -> Tuple[PyTree, jax.Array]:
+        """Plain `train` as ONE compiled program: the plan's next n_steps
+        index rows drive a `lax.scan` whose body gathers each batch from
+        the device-resident arrays — no per-step dispatch or host
+        round-trip. Bit-identical to `train` over the equivalent iterator.
+        (Pool-regularized training has no single-model scanned form; the
+        whole pool procedure is `local_client_train_scanned`.)"""
+        return self.scanned_plain(params, plan.arrays, plan.take(n_steps))
 
     # -- paper Alg. 1 lines 3–17 -------------------------------------------
 
@@ -278,20 +383,51 @@ class LocalTrainer:
         may fill `record.val_metric` with a per-model validation score."""
         fed = self.fed
         if not fed.use_pool:
-            params, task = self.train(m_in, data_iter, fed.e_local)
+            params, _ = self.train(m_in, data_iter, fed.e_local)
             return params, None, []
 
         pool = self.backend.create(m_in, fed)
+        tasks: List[jax.Array] = []
         records: List[ModelRecord] = []
         for j in range(fed.pool_size):          # train S models
             m_j = pool.average()                # Eq. 6 init
             m_j, task = self.train(m_j, data_iter, fed.e_local, pool=pool)
             pool = pool.append(m_j)
-            rec = ModelRecord(index=j, task_loss=task)
-            records.append(rec)
             if on_model_end is not None:
+                # the callback observes a complete record — this is the
+                # one path that still syncs per model, by contract
+                rec = ModelRecord(index=j, task_loss=float(task))
+                records.append(rec)
                 on_model_end(rec, m_j)
+            else:
+                tasks.append(task)
+        if on_model_end is None:
+            # single deferred sync: every model's dispatches are already
+            # queued before the first float() blocks
+            records = [ModelRecord(index=j, task_loss=float(t))
+                       for j, t in enumerate(tasks)]
         return pool.average(), pool, records
+
+    def local_client_train_scanned(self, m_in: PyTree, plan: DataPlan,
+                                   ) -> Tuple[PyTree, Any,
+                                              List[ModelRecord]]:
+        """`local_client_train` as ONE compiled program: S pool models ×
+        e_local steps — pool average init, regularized step, pool append —
+        scanned with the pool pytree as carry. Bit-identical to the
+        iterator path on the equivalent stream (the acceptance contract);
+        callers needing per-model callbacks use `local_client_train`."""
+        fed = self.fed
+        if not fed.use_pool:
+            params, _ = self.train_scanned(m_in, plan, fed.e_local)
+            return params, None, []
+        idx = plan.take(fed.pool_size * fed.e_local).reshape(
+            fed.pool_size, fed.e_local, plan.batch_size)
+        avg, pool, tasks = self.scanned_local(
+            m_in, plan.arrays, idx, jnp.float32(fed.alpha),
+            jnp.float32(fed.beta))
+        records = [ModelRecord(index=j, task_loss=float(t))
+                   for j, t in enumerate(np.asarray(tasks))]
+        return avg, pool, records
 
     # -- batched variants (B independent runs, leading run axis) ------------
 
@@ -337,17 +473,63 @@ class LocalTrainer:
             return params, None, [[] for _ in range(b)]
 
         pools = self._batched_pool_create(m_in)
-        records: List[List[ModelRecord]] = [[] for _ in range(b)]
+        tasks: List[jax.Array] = []
         for j in range(fed.pool_size):          # train S models per run
             m_j = _batched_pool_average(pools)
             m_j, task = self.train_batched(m_j, data_iters, fed.e_local,
                                            pools=pools, alphas=alphas,
                                            betas=betas)
             pools = _batched_pool_append(pools, m_j)
-            for i in range(b):
-                records[i].append(ModelRecord(index=j,
-                                              task_loss=float(task[i])))
+            tasks.append(task)
+        # one deferred sync for the whole (S, B) loss grid — per-element
+        # float(task[i]) inside the loop forced S·B blocking transfers
+        records = _model_records(jnp.stack(tasks), b)
         return _batched_pool_average(pools), pools, records
+
+    # -- scanned batched variants (DataPlans, stacked run axis) --------------
+
+    def train_scanned_batched(self, params: PyTree, plans: List[DataPlan],
+                              n_steps: int, *, arrays: Any = None,
+                              ) -> Tuple[PyTree, jax.Array]:
+        """`train_scanned` over B runs: stacked index tensors drive one
+        vmapped scan — the whole group's phase is a single dispatch, with
+        no per-step host `stack_trees` re-upload. `arrays` lets the
+        caller reuse a stacked-arrays pytree across visits."""
+        if arrays is None:
+            arrays = stack_plan_arrays(plans)
+        idx = stack_plan_indices(plans, n_steps)
+        return self.batched_scanned_plain(params, arrays, idx)
+
+    def local_client_train_scanned_batched(self, m_in: PyTree,
+                                           plans: List[DataPlan],
+                                           alphas: jax.Array,
+                                           betas: jax.Array, *,
+                                           arrays: Any = None,
+                                           ) -> Tuple[PyTree, Any,
+                                                      List[List[ModelRecord]]]:
+        """`local_client_train_scanned` over B runs in one vmapped scan
+        program (B × S × e_local steps, one dispatch)."""
+        fed = self.fed
+        b = len(plans)
+        if not fed.use_pool:
+            params, _ = self.train_scanned_batched(m_in, plans, fed.e_local,
+                                                   arrays=arrays)
+            return params, None, [[] for _ in range(b)]
+        if arrays is None:
+            arrays = stack_plan_arrays(plans)
+        idx = stack_plan_indices(plans, fed.pool_size * fed.e_local)
+        idx = idx.reshape(b, fed.pool_size, fed.e_local, -1)
+        avg, pools, tasks = self.batched_scanned_local(
+            m_in, arrays, idx, alphas, betas)
+        return avg, pools, _model_records(tasks.T, b)
+
+
+def _model_records(task_grid: jax.Array, b: int) -> List[List[ModelRecord]]:
+    """(S, B) last-step task losses → per-run ModelRecord lists, converted
+    to host floats in one transfer."""
+    grid = np.asarray(task_grid)
+    return [[ModelRecord(index=j, task_loss=float(grid[j, i]))
+             for j in range(grid.shape[0])] for i in range(b)]
 
 
 def stack_trees(trees: List[PyTree]) -> PyTree:

@@ -7,6 +7,8 @@ from repro.data.synthetic import (SyntheticImageDataset, SyntheticTextDataset,
                                   apply_domain, make_domain_datasets,
                                   make_image_dataset, make_lm_dataset)
 from repro.data.pipeline import batch_iterator
+from repro.data.plan import (DataPlan, all_want_scan, stack_plan_arrays,
+                             stack_plan_indices, wants_scan)
 
 __all__ = ["dirichlet_partition", "domain_shift_partition",
            "shard_partition", "quantity_skew_partition",
@@ -14,4 +16,5 @@ __all__ = ["dirichlet_partition", "domain_shift_partition",
            "severity_ladder", "train_val_split", "apply_domain",
            "SyntheticImageDataset", "SyntheticTextDataset",
            "make_image_dataset", "make_domain_datasets", "make_lm_dataset",
-           "batch_iterator"]
+           "batch_iterator", "DataPlan", "all_want_scan",
+           "stack_plan_arrays", "stack_plan_indices", "wants_scan"]

@@ -11,14 +11,24 @@ import numpy as np
 def batch_iterator(arrays: Dict[str, np.ndarray], batch_size: int,
                    seed: int = 0, drop_remainder: bool = True
                    ) -> Iterator[Dict[str, jnp.ndarray]]:
-    """Infinite shuffled batch stream over a dict of equal-length arrays."""
+    """Infinite shuffled batch stream over a dict of equal-length arrays.
+
+    Every yielded batch has the same shape: with ``drop_remainder=False``
+    and ``n % batch_size != 0`` the final batch of each epoch would be
+    ragged, which silently retriggers compilation of every cached step
+    function and breaks the scan-compiled local phase's fixed-shape
+    contract — that combination raises instead (see
+    `repro.data.plan._ragged_error`)."""
+    from repro.data.plan import _ragged_error
     n = len(next(iter(arrays.values())))
     assert all(len(a) == n for a in arrays.values())
     rng = np.random.default_rng(seed)
     bs = min(batch_size, n)
+    if not drop_remainder and n % bs:
+        raise _ragged_error(n, bs)
     while True:
         perm = rng.permutation(n)
-        for s in range(0, n - bs + 1 if drop_remainder else n, bs):
+        for s in range(0, n - bs + 1, bs):
             idx = perm[s:s + bs]
             yield {k: jnp.asarray(a[idx]) for k, a in arrays.items()}
 

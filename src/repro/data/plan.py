@@ -1,0 +1,174 @@
+"""The device-resident data plane: `DataPlan`.
+
+`batch_iterator` streams batches through the host — every step gathers on
+numpy and re-uploads the result, so a dispatch-bound local phase (the
+paper's S × e_local inner loop) pays a host round-trip per SGD step. A
+`DataPlan` removes the host from the steady state:
+
+* the client's arrays are placed on device **once** (construction is a
+  no-op for arrays that already live there), and
+* the epoch-shuffle schedule is a precomputed index tensor — a pure
+  function of ``(seed, n, batch_size, n_steps)`` that shares
+  `batch_iterator`'s exact permutation logic, so batch ``s`` of the
+  schedule is bit-identical to the ``s``-th batch the iterator would
+  yield.
+
+``take(k)`` hands the next ``k`` schedule rows to a jitted consumer as a
+``(k, batch_size)`` int32 tensor and advances the cursor; the batch
+gather happens *inside* the compiled program (`LocalTrainer.train_scanned`
+/ `local_client_train_scanned`). A DataPlan is also a drop-in iterator —
+``next(plan)`` yields the same batch dict, gathered on device — so code
+paths that keep the per-step loop (custom step factories, callback runs)
+consume the same stream through the same cursor.
+
+Like `batch_iterator` streams, a DataPlan is stateful: never share one
+across runs of a batch (`run_batch` rejects it); sharing the underlying
+device arrays between plans is free and encouraged.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Arrays = Dict[str, np.ndarray]
+
+
+def _ragged_error(n: int, bs: int) -> ValueError:
+    return ValueError(
+        f"drop_remainder=False with n={n} not divisible by batch_size={bs} "
+        "would yield a ragged final batch each epoch; a per-epoch shape "
+        "change silently retriggers compilation of every cached step and "
+        "is incompatible with the scan-compiled local phase's fixed-shape "
+        "contract. Pad the arrays to a multiple of batch_size or use "
+        "drop_remainder=True.")
+
+
+class DataPlan:
+    """Device-resident client shard plus a deterministic epoch-shuffle
+    schedule (see the module docstring).
+
+    Construction uploads the arrays once; ``arrays`` is the device-side
+    dict a compiled consumer receives verbatim. The schedule extends
+    lazily in whole epochs, so a plan serves any number of visits
+    (warmup + every local phase of a chain/ring run) without a declared
+    horizon.
+    """
+
+    def __init__(self, arrays: Arrays, batch_size: int, seed: int = 0,
+                 drop_remainder: bool = True, scan: bool = True):
+        n = len(next(iter(arrays.values())))
+        assert all(len(a) == n for a in arrays.values())
+        self.n = n
+        self.seed = seed
+        self.batch_size = min(batch_size, n)
+        if not drop_remainder and n % self.batch_size:
+            raise _ragged_error(n, self.batch_size)
+        # scan=False opts out of the scan-compiled local phase (results are
+        # bit-identical either way): XLA CPU lowers convolutions *inside* a
+        # scan/while body to a ~20× slower single-shot code path than the
+        # dispatched conv thunks, so conv models should keep the per-step
+        # loop — which still benefits from the device-resident arrays
+        # (batches gather on device instead of numpy-gather + re-upload).
+        # See DESIGN.md §9.
+        self.scan = scan
+        self.arrays = {k: jnp.asarray(a) for k, a in arrays.items()}
+        self._rng = np.random.default_rng(seed)
+        self._sched = np.empty((0, self.batch_size), np.int64)
+        self._cursor = 0
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return self.n // self.batch_size
+
+    def _ensure(self, n_rows: int) -> None:
+        """Extend the schedule to ≥ n_rows rows, whole epochs at a time —
+        byte-for-byte `batch_iterator`'s permutation logic. All missing
+        epochs are drawn first and concatenated once (tiled one-batch
+        clients have steps_per_epoch == 1; appending per epoch would be
+        quadratic in the schedule length)."""
+        per_epoch = self.steps_per_epoch
+        epochs = [self._sched]
+        have = len(self._sched)
+        while have < n_rows:
+            perm = self._rng.permutation(self.n)
+            epochs.append(perm[:per_epoch * self.batch_size].reshape(
+                per_epoch, self.batch_size))
+            have += per_epoch
+        if len(epochs) > 1:
+            self._sched = np.concatenate(epochs)
+
+    def take(self, n_steps: int) -> jax.Array:
+        """Consume the next ``n_steps`` schedule rows as an
+        ``(n_steps, batch_size)`` int32 device tensor."""
+        self._ensure(self._cursor + n_steps)
+        rows = self._sched[self._cursor:self._cursor + n_steps]
+        self._cursor += n_steps
+        return jnp.asarray(rows, jnp.int32)
+
+    def peek_schedule(self, n_steps: int) -> np.ndarray:
+        """The first ``n_steps`` schedule rows (host-side, cursor
+        untouched) — the bit-identity oracle the tests pin against
+        `batch_iterator`."""
+        self._ensure(n_steps)
+        return self._sched[:n_steps].copy()
+
+    # -- iterator protocol: drop-in for `batch_iterator` streams ------------
+
+    def __iter__(self) -> "DataPlan":
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        row = self.take(1)[0]
+        return {k: a[row] for k, a in self.arrays.items()}
+
+
+def wants_scan(it) -> bool:
+    """True when a client stream asks for the scan-compiled local phase."""
+    return isinstance(it, DataPlan) and it.scan
+
+
+def all_want_scan(its) -> bool:
+    """True when every entry of a client-stream list is a scan-routed
+    DataPlan — the condition for the batched scan-compiled path."""
+    return all(wants_scan(it) for it in its)
+
+
+def stack_plan_arrays(plans: List[DataPlan],
+                      pad_to: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Stack B plans' device arrays along a new leading run axis for the
+    batched scanned path. Plans whose shards differ in length are
+    zero-padded to the longest (or ``pad_to``) — the padding rows are
+    never gathered because each plan's schedule only indexes its own
+    ``n`` — so per-run results stay bit-identical to the unpadded
+    sequential runs."""
+    n_max = pad_to if pad_to is not None else max(p.n for p in plans)
+
+    def pad(a):
+        if a.shape[0] == n_max:
+            return a
+        width = [(0, n_max - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, width)
+
+    try:
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[{k: pad(a) for k, a in p.arrays.items()}
+                              for p in plans])
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            "batched scanned execution requires structurally identical "
+            f"client shards across the run axis (same keys, trailing "
+            f"shapes and dtypes): {e}") from e
+
+
+def stack_plan_indices(plans: List[DataPlan], n_steps: int) -> jax.Array:
+    """Advance every plan by ``n_steps`` and stack the consumed schedule
+    rows into a ``(B, n_steps, batch_size)`` tensor."""
+    try:
+        return jnp.stack([p.take(n_steps) for p in plans])
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            "batched scanned execution requires one batch size across the "
+            f"run axis: {e}") from e

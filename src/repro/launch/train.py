@@ -23,9 +23,8 @@ import numpy as np
 from repro.api import Experiment, list_strategies, run
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import FedConfig, get_arch
-from repro.data import (batch_iterator, dirichlet_partition,
-                        make_domain_datasets, make_image_dataset,
-                        make_lm_dataset)
+from repro.data import (DataPlan, dirichlet_partition, make_domain_datasets,
+                        make_image_dataset, make_lm_dataset)
 from repro.data.partition import domain_shift_partition
 from repro.models import build_model
 
@@ -58,7 +57,11 @@ def build_clients(args, cfg):
                                seed=args.seed + 77)[0]
         test_batch = {"tokens": jnp.asarray(hold.tokens[:64, :-1]),
                       "labels": jnp.asarray(hold.tokens[:64, 1:])}
-    iters = [batch_iterator(c, args.batch, seed=args.seed * 100 + i)
+    # device-resident plans, bit-identical to the batch_iterator streams
+    # on these seeds; conv models keep the per-step dispatch path (XLA
+    # CPU's in-scan convolutions are pathologically slow — DESIGN.md §9)
+    iters = [DataPlan(c, args.batch, seed=args.seed * 100 + i,
+                      scan=cfg.family != "cnn")
              for i, c in enumerate(clients)]
     return iters, test_batch
 

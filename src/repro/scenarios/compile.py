@@ -10,9 +10,14 @@
 registered partitioner, applies the population knobs (participation,
 dropout, stragglers), and resolves the eval-split policy. It returns
 plain numpy client arrays; `ScenarioData.iterators()` mints *fresh*
-stateful batch iterators per call, which is what lets one materialized
-scenario feed many experiments without tripping `run_batch`'s
-shared-iterator rejection.
+stateful `DataPlan` streams per call — the client shards are uploaded
+to device ONCE per materialization and shared by every plan, while the
+per-plan shuffle cursor is what lets one materialized scenario feed
+many experiments without tripping `run_batch`'s shared-iterator
+rejection. Experiments carrying DataPlans execute their local phases
+through the scan-compiled path (DESIGN.md §9); `batch_iterators()`
+keeps the legacy host-streaming form (same seeds, bit-identical batch
+sequences).
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ from repro.api.engine import Experiment
 from repro.configs.base import FedConfig
 from repro.data.partition import train_val_split
 from repro.data.pipeline import batch_iterator, image_batch
+from repro.data.plan import DataPlan
 from repro.data.synthetic import (SyntheticImageDataset, make_domain_datasets,
                                   make_image_dataset)
 from repro.scenarios.registry import get_partitioner
@@ -49,23 +55,51 @@ class ScenarioData:
     eval_data: Arrays
     n_classes: int
 
-    def iterators(self, base_seed: Optional[int] = None) -> List[Any]:
-        """Fresh per-client infinite batch iterators. Call once per
-        experiment — streams are stateful and must not be shared across
-        runs of a batch. Clients smaller than `batch_size` (quantity
-        skew, stragglers) are deterministically tiled up to one full
-        batch: the batch *shape* must be a pure function of the spec, or
-        a sweep's runs could not stack into one compiled group."""
+    def _tiled_client(self, i: int) -> Arrays:
+        """Client `i`'s arrays, deterministically tiled up to one full
+        batch when smaller than `batch_size` (quantity skew, stragglers):
+        the batch *shape* must be a pure function of the spec, or a
+        sweep's runs could not stack into one compiled group."""
+        c = self.client_data[i]
+        n = len(c["labels"])
+        bs = self.spec.batch_size
+        if n < bs:
+            idx = np.tile(np.arange(n), -(-bs // n))[:bs]
+            c = {k: v[idx] for k, v in c.items()}
+        return c
+
+    def _device_clients(self) -> List[Dict[str, Any]]:
+        """Per-client arrays resident on device, uploaded once per
+        materialization and shared by every DataPlan minted from it."""
+        if not hasattr(self, "_device_cache"):
+            self._device_cache = [
+                {k: jnp.asarray(v) for k, v in self._tiled_client(i).items()}
+                for i in range(len(self.client_data))]
+        return self._device_cache
+
+    def iterators(self, base_seed: Optional[int] = None,
+                  scan: bool = True) -> List[Any]:
+        """Fresh per-client `DataPlan` streams. Call once per experiment —
+        the shuffle cursor is stateful and must not be shared across runs
+        of a batch; the underlying device arrays ARE shared (uploaded
+        once). Batch sequences are bit-identical to `batch_iterators()`.
+        `scan=False` keeps the per-step dispatch path over the
+        device-resident arrays — required for conv models on XLA CPU,
+        whose in-scan convolutions lower to a far slower code path
+        (DESIGN.md §9)."""
         base = self.seed if base_seed is None else base_seed
-        its = []
-        for i, c in enumerate(self.client_data):
-            n = len(c["labels"])
-            bs = self.spec.batch_size
-            if n < bs:
-                idx = np.tile(np.arange(n), -(-bs // n))[:bs]
-                c = {k: v[idx] for k, v in c.items()}
-            its.append(batch_iterator(c, bs, seed=base * 100 + i))
-        return its
+        return [DataPlan(arr, self.spec.batch_size, seed=base * 100 + i,
+                         scan=scan)
+                for i, arr in enumerate(self._device_clients())]
+
+    def batch_iterators(self, base_seed: Optional[int] = None) -> List[Any]:
+        """Legacy host-streaming form of `iterators()` (the per-step
+        dispatch path) — kept for fallback consumers and as the
+        bit-identity oracle in tests and the local_phase benchmark."""
+        base = self.seed if base_seed is None else base_seed
+        return [batch_iterator(self._tiled_client(i), self.spec.batch_size,
+                               seed=base * 100 + i)
+                for i in range(len(self.client_data))]
 
     def eval_dataset(self) -> SyntheticImageDataset:
         return SyntheticImageDataset(self.eval_data["images"],
@@ -182,6 +216,7 @@ def build_experiments(spec: ScenarioSpec, model, *,
                       shots: int = 1,
                       eval_builder: Optional[Callable] = None,
                       strategy_options: Optional[Dict[str, Dict]] = None,
+                      scan: bool = True,
                       ) -> List[Experiment]:
     """Compile a scenario sweep into Experiments: one per (strategy, seed),
     sharing one materialization per seed but minting fresh iterators per
@@ -190,13 +225,16 @@ def build_experiments(spec: ScenarioSpec, model, *,
     plan IR landed that includes ring (`fedelmy_fewshot`, cycled `shots`
     times) and two-phase (`metafed`) strategies, not just the chains.
     Per-strategy `strategy_options` keep the grouping — they're part of
-    the key, as is `shots`."""
+    the key, as is `shots`. `scan=False` keeps the per-step dispatch path
+    over the device-resident shards — pass it for conv models on XLA CPU
+    (DESIGN.md §9)."""
     fed = dataclasses.replace(fed, n_clients=spec.n_active)
     build_eval = eval_builder if eval_builder is not None else accuracy_eval
     datas = {seed: materialize(spec, seed) for seed in seeds}
     evals = {seed: build_eval(model, datas[seed]) for seed in seeds}
     opts = strategy_options or {}
-    return [Experiment(model=model, client_iters=datas[seed].iterators(),
+    return [Experiment(model=model,
+                       client_iters=datas[seed].iterators(scan=scan),
                        fed=fed, strategy=strategy,
                        key=jax.random.PRNGKey(seed), eval_fn=evals[seed],
                        shots=shots,

@@ -1,0 +1,401 @@
+"""Tests for the device-resident data plane (`repro.data.plan`) and the
+scan-compiled local phase.
+
+Three contracts:
+
+1. *Schedule identity* — a `DataPlan`'s index schedule is bit-identical
+   to the batch sequence `batch_iterator` yields for the same
+   (seed, n, batch_size), property-tested across the parameter space.
+2. *Scanned-path identity* — every plan strategy produces bit-identical
+   params, records and pools whether its experiments carry legacy
+   streaming iterators or DataPlans (sequential AND batched), including
+   groups whose client shards differ in length (zero-padded stacking).
+3. *Satellite regressions* — ragged final batches raise instead of
+   silently recompiling; `tree_mean` is the running f32 fold;
+   `LocalTrainer.train` returns a jax scalar (no per-call device sync).
+"""
+import dataclasses
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.api import Experiment, LocalTrainer, run, run_batch, tree_mean
+from repro.configs import FedConfig
+from repro.data import DataPlan, batch_iterator, stack_plan_arrays
+
+KEY = jax.random.PRNGKey(0)
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+FED = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                learning_rate=1e-2)
+
+
+def _tiny_model():
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (4, 3)),
+                "b": jnp.zeros((3,))}
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(batch["y"], 3)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    def forward(params, batch):
+        return batch["x"] @ params["w"] + params["b"]
+
+    return TinyModel(init, loss_fn, forward)
+
+
+def _client_data(n_clients=2, n=16):
+    return [{"x": np.random.default_rng(i).normal(
+                 size=(n, 4)).astype(np.float32),
+             "y": np.arange(n) % 3}
+            for i in range(n_clients)]
+
+
+def _metric_fn(model):
+    hold = {"x": jax.random.normal(jax.random.PRNGKey(9), (8, 4)),
+            "y": jnp.arange(8) % 3}
+    return lambda p: -model.loss_fn(p, hold)
+
+
+def _assert_trees_bitwise_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# 1. Schedule identity: DataPlan == batch_iterator, property-tested
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 40),
+       bs=st.integers(1, 48))
+@settings(max_examples=12, deadline=None)
+def test_dataplan_schedule_matches_batch_iterator(seed, n, bs):
+    """Property: for any (seed, n, batch_size) — including bs > n, where
+    both clamp to full-shard batches — the DataPlan's batches are
+    bit-identical to `batch_iterator`'s stream, across multiple epochs
+    both via `take` (the scanned contract) and via the iterator
+    protocol (the fallback contract)."""
+    arrays = {"x": np.random.default_rng(seed).normal(
+                  size=(n, 3)).astype(np.float32),
+              "y": np.arange(n)}
+    eff_bs = min(bs, n)
+    k = 2 * (n // eff_bs) + 3          # cross at least two epoch boundaries
+    it = batch_iterator(arrays, bs, seed=seed)
+    ref = [next(it) for _ in range(k)]
+
+    plan = DataPlan(arrays, bs, seed=seed)
+    idx = np.asarray(plan.peek_schedule(k))
+    for s, batch in enumerate(ref):
+        np.testing.assert_array_equal(arrays["x"][idx[s]],
+                                      np.asarray(batch["x"]))
+        np.testing.assert_array_equal(arrays["y"][idx[s]],
+                                      np.asarray(batch["y"]))
+
+    for s, batch in enumerate(ref):     # iterator protocol, same cursor
+        got = next(plan)
+        np.testing.assert_array_equal(np.asarray(got["x"]),
+                                      np.asarray(batch["x"]), err_msg=str(s))
+        np.testing.assert_array_equal(np.asarray(got["y"]),
+                                      np.asarray(batch["y"]))
+
+
+def test_take_and_iteration_share_one_cursor():
+    """Mixed consumption (scanned phase, then fallback iteration, then
+    another scanned phase) walks one continuous schedule — the pattern a
+    metafed run produces (scanned plain phase → custom iterator phase)."""
+    arrays = {"x": np.arange(24, dtype=np.float32).reshape(12, 2)}
+    a = DataPlan(arrays, 4, seed=3)
+    b = DataPlan(arrays, 4, seed=3)
+    first = np.asarray(a.take(2))
+    mid = next(a)
+    last = np.asarray(a.take(2))
+    whole = np.asarray(b.take(5))
+    np.testing.assert_array_equal(first, whole[:2])
+    np.testing.assert_array_equal(np.asarray(mid["x"]),
+                                  np.asarray(arrays["x"][whole[2]]))
+    np.testing.assert_array_equal(last, whole[3:])
+
+
+def test_ragged_final_batch_raises():
+    """drop_remainder=False with n % batch_size != 0 used to yield a
+    ragged final batch each epoch — a silent per-epoch recompile of every
+    cached step, and incompatible with the scan contract. Both stream
+    forms must refuse it up front; the divisible case stays allowed."""
+    arrays = {"x": np.zeros((10, 2), np.float32)}
+    with pytest.raises(ValueError, match="ragged final batch"):
+        next(batch_iterator(arrays, 4, drop_remainder=False))
+    with pytest.raises(ValueError, match="ragged final batch"):
+        DataPlan(arrays, 4, drop_remainder=False)
+    # n % bs == 0: identical to drop_remainder=True, allowed
+    ok = batch_iterator(arrays, 5, drop_remainder=False)
+    assert next(ok)["x"].shape == (5, 2)
+    assert DataPlan(arrays, 5, drop_remainder=False).take(3).shape == (3, 5)
+
+
+# ---------------------------------------------------------------------------
+# 2. Scanned-path identity: every plan strategy, sequential and batched
+# ---------------------------------------------------------------------------
+
+def _iters(data, base=0):
+    return [batch_iterator(c, 4, seed=base * 100 + i)
+            for i, c in enumerate(data)]
+
+
+def _plans(data, base=0):
+    return [DataPlan(c, 4, seed=base * 100 + i)
+            for i, c in enumerate(data)]
+
+
+STRATEGY_CASES = [("fedelmy", {}), ("fedelmy_fewshot", {"shots": 2}),
+                  ("fedelmy_pfl", {}), ("fedseq", {}), ("dfedavgm", {}),
+                  ("dfedsam", {}), ("metafed", {}), ("local_only", {})]
+
+
+@pytest.mark.parametrize("strategy,kw", STRATEGY_CASES)
+def test_scanned_bit_identical_to_iterator_sequential(strategy, kw):
+    """The acceptance contract: an Experiment carrying DataPlans runs its
+    local phases scan-compiled, and every strategy's params, records and
+    pools are bit-identical to the iterator path on the same seeds —
+    including the custom-block strategies (dfedsam, metafed phase 2),
+    which consume the plans through the iterator fallback."""
+    model = _tiny_model()
+    metric = _metric_fn(model)
+    data = _client_data()
+    mk = lambda its: Experiment(                        # noqa: E731
+        model=model, client_iters=its, fed=FED, strategy=strategy,
+        key=KEY, eval_fn=metric, **kw)
+    a = run(mk(_iters(data)))
+    b = run(mk(_plans(data)))
+    _assert_trees_bitwise_equal(a.params, b.params, strategy)
+    assert a.final_metric == b.final_metric, strategy
+    assert len(a.clients) == len(b.clients), strategy
+    for ca, cb in zip(a.clients, b.clients):
+        assert (ca.client, ca.rank, ca.global_metric) == \
+            (cb.client, cb.rank, cb.global_metric)
+        assert [m.task_loss for m in ca.models] == \
+            [m.task_loss for m in cb.models]
+    for ra, rb in zip(a.rounds, b.rounds):
+        assert (ra.round, ra.global_metric) == (rb.round, rb.global_metric)
+    if a.final_pool is not None:
+        _assert_trees_bitwise_equal(a.final_pool, b.final_pool, strategy)
+
+
+@pytest.mark.parametrize("strategy,kw", STRATEGY_CASES)
+def test_scanned_bit_identical_batched(strategy, kw):
+    """Same contract through `run_batch`: a DataPlan-carrying group stacks
+    index tensors and runs its local phases as one vmapped scan, still one
+    compiled group, still bit-identical per run to sequential `run` on
+    the iterator path."""
+    model = _tiny_model()
+    data = _client_data()
+    seeds = [0, 1]
+    seq = [run(Experiment(model=model, client_iters=_iters(data, s),
+                          fed=FED, strategy=strategy,
+                          key=jax.random.PRNGKey(s), **kw))
+           for s in seeds]
+    batch = run_batch(
+        Experiment(model=model, client_iters=_plans(data), fed=FED,
+                   strategy=strategy, **kw),
+        axes=BatchAxes_seeds(seeds, lambda s: _plans(data, s)))
+    assert batch.n_compiled_groups == 1, strategy
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params, strategy)
+        assert [[m.task_loss for m in c.models] for c in b.clients] == \
+            [[m.task_loss for m in c.models] for c in s.clients]
+
+
+def BatchAxes_seeds(seeds, factory):
+    from repro.api import BatchAxes
+    return BatchAxes(seeds=seeds, client_iters_for_seed=factory)
+
+
+def test_batched_group_pads_unequal_client_shards():
+    """Two runs whose client shards differ in length still batch: the
+    stacked arrays are zero-padded to the longest shard, the padding rows
+    are never gathered, and per-run results stay bit-identical to the
+    unpadded sequential runs."""
+    model = _tiny_model()
+    data_a, data_b = _client_data(n=12), _client_data(n=20)
+    mk = lambda its: Experiment(model=model, client_iters=its, fed=FED,  # noqa: E731
+                                strategy="fedelmy", key=KEY)
+    seq = [run(mk(_plans(data_a))), run(mk(_plans(data_b)))]
+    batch = run_batch(experiments=[mk(_plans(data_a)), mk(_plans(data_b))])
+    assert batch.n_compiled_groups == 1
+    for s, b in zip(seq, batch):
+        _assert_trees_bitwise_equal(s.params, b.params)
+
+    stacked = stack_plan_arrays(_plans(data_a) + _plans(data_b))
+    assert stacked["x"].shape == (4, 20, 4)     # padded to the longest
+
+
+def test_batched_pads_per_rank_heterogeneous_shards():
+    """Client ranks with different shard lengths *within* each run (the
+    quantity-skew shape): every visit pads to the group-wide longest
+    shard — one compiled shape for the whole chain — and per-run results
+    stay bit-identical to sequential."""
+    model = _tiny_model()
+    data = [_client_data(n_clients=1, n=12)[0],
+            _client_data(n_clients=1, n=20)[0]]
+    mk = lambda: Experiment(model=model, client_iters=_plans(data),  # noqa: E731
+                            fed=FED, strategy="fedelmy", key=KEY)
+    seq = run(mk())
+    batch = run_batch(experiments=[mk(), mk()])
+    assert batch.n_compiled_groups == 1
+    for b in batch:
+        _assert_trees_bitwise_equal(seq.params, b.params)
+
+
+def test_build_experiments_scan_flag_plumbs_through():
+    """`build_experiments(..., scan=False)` (and run_scenario via **kw)
+    mints per-step-routed plans — the conv-on-CPU configuration reachable
+    through the public scenario API."""
+    from repro.configs import FedConfig as FC
+    from repro.scenarios import get_scenario
+    from repro.scenarios.compile import build_experiments
+    spec = get_scenario("dir_label_skew").replace(n_samples=240, n_test=60,
+                                                  batch_size=16)
+    fed = FC(n_clients=4, pool_size=2, e_local=2, e_warmup=1)
+    on = build_experiments(spec, _tiny_model(), fed=fed, seeds=(0,))
+    off = build_experiments(spec, _tiny_model(), fed=fed, seeds=(0,),
+                            scan=False)
+    assert all(p.scan for p in on[0].client_iters)
+    assert not any(p.scan for p in off[0].client_iters)
+
+
+def test_mixed_streams_fall_back_to_step_loop():
+    """Sequential routing is per-visit: a run mixing a DataPlan with a
+    plain iterator scans the plan-backed visits, step-loops the rest, and
+    still matches the all-iterator result bit-for-bit."""
+    model = _tiny_model()
+    data = _client_data()
+    mixed = [DataPlan(data[0], 4, seed=0), batch_iterator(data[1], 4,
+                                                          seed=1)]
+    a = run(Experiment(model=model, client_iters=mixed, fed=FED,
+                       strategy="fedseq", key=KEY))
+    b = run(Experiment(model=model, client_iters=_iters(data), fed=FED,
+                       strategy="fedseq", key=KEY))
+    _assert_trees_bitwise_equal(a.params, b.params)
+
+
+def test_scan_false_plans_keep_step_loop_and_match():
+    """`DataPlan(scan=False)` (the conv-on-CPU configuration) opts out of
+    scan routing — the per-step loop consumes the device-resident arrays
+    through the same cursor, bit-identical to both other forms."""
+    model = _tiny_model()
+    data = _client_data()
+    noscan = [DataPlan(c, 4, seed=i, scan=False)
+              for i, c in enumerate(data)]
+    assert not any(p.scan for p in noscan)
+    a = run(Experiment(model=model, client_iters=noscan, fed=FED,
+                       strategy="fedelmy", key=KEY))
+    b = run(Experiment(model=model, client_iters=_plans(data), fed=FED,
+                       strategy="fedelmy", key=KEY))
+    c = run(Experiment(model=model, client_iters=_iters(data), fed=FED,
+                       strategy="fedelmy", key=KEY))
+    _assert_trees_bitwise_equal(a.params, b.params)
+    _assert_trees_bitwise_equal(a.params, c.params)
+
+
+def test_callback_runs_keep_iterator_path_with_plans():
+    """on_model_end forces the per-model loop (the callback observes each
+    pool model as it lands) — DataPlans serve it through the iterator
+    fallback with identical results."""
+    from repro.api import Callbacks
+    model = _tiny_model()
+    data = _client_data()
+    seen = []
+    cb = Callbacks(on_model_end=lambda rec, p: seen.append(rec.index))
+    a = run(Experiment(model=model, client_iters=_plans(data), fed=FED,
+                       strategy="fedelmy", key=KEY, callbacks=cb))
+    b = run(Experiment(model=model, client_iters=_iters(data), fed=FED,
+                       strategy="fedelmy", key=KEY))
+    assert seen == [0, 1] * 2           # pool_size models × 2 clients
+    _assert_trees_bitwise_equal(a.params, b.params)
+    assert [m.task_loss for c in a.clients for m in c.models] == \
+        [m.task_loss for c in b.clients for m in c.models]
+
+
+def test_scenario_iterators_are_dataplans_and_match_legacy():
+    """`ScenarioData.iterators()` mints DataPlans over device arrays
+    uploaded once (shared across calls); `batch_iterators()` keeps the
+    legacy streaming form with bit-identical batch sequences."""
+    from repro.scenarios import get_scenario, materialize
+    spec = get_scenario("dir_label_skew").replace(n_samples=240, n_test=60,
+                                                  batch_size=16)
+    data = materialize(spec, 0)
+    plans, plans2 = data.iterators(), data.iterators()
+    its = data.batch_iterators()
+    assert all(isinstance(p, DataPlan) for p in plans)
+    for p, p2 in zip(plans, plans2):    # device arrays shared, cursors not
+        assert all(a is b for a, b in zip(jax.tree.leaves(p.arrays),
+                                          jax.tree.leaves(p2.arrays)))
+    for p, it in zip(plans, its):
+        for _ in range(3):
+            _assert_trees_bitwise_equal(next(p), next(it))
+
+
+# ---------------------------------------------------------------------------
+# 3. Satellite regressions
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 9), seed=st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_tree_mean_is_running_f32_fold(n, seed):
+    """`tree_mean`'s spec: a left-to-right running f32 accumulation
+    divided by N, cast back to the leaf dtype — O(1) extra memory
+    instead of stacking N f32 copies."""
+    rng = np.random.default_rng(seed)
+    trees = [{"w": jnp.asarray(rng.normal(size=(7, 5)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(5,)).astype(np.float16))}
+             for _ in range(n)]
+    got = tree_mean(trees)
+    for key in ("w", "b"):
+        acc = np.asarray(trees[0][key], np.float32).copy()
+        for t in trees[1:]:
+            acc = (jnp.asarray(acc) +
+                   jnp.asarray(np.asarray(t[key], np.float32)))
+        want = (acc / n).astype(trees[0][key].dtype)
+        np.testing.assert_array_equal(np.asarray(got[key]),
+                                      np.asarray(want), err_msg=key)
+        assert got[key].dtype == trees[0][key].dtype
+
+
+def test_train_returns_jax_scalar():
+    """Satellite: `LocalTrainer.train` must not force a blocking device
+    sync per call — the task loss comes back as a jax scalar and becomes
+    a float only at record-construction time."""
+    model = _tiny_model()
+    trainer = LocalTrainer(model.loss_fn, FED)
+    data = _client_data(n_clients=1)
+    _, task = trainer.train(model.init(KEY), _iters(data)[0], 2)
+    assert isinstance(task, jax.Array) and task.shape == ()
+    _, _, records = trainer.local_client_train(model.init(KEY),
+                                               _iters(data)[0])
+    assert all(isinstance(r.task_loss, float) for r in records)
+
+
+def test_shared_dataplan_across_runs_rejected():
+    """A DataPlan's cursor is stateful exactly like an iterator's stream
+    position — run_batch must keep rejecting cross-run sharing."""
+    model = _tiny_model()
+    shared = _plans(_client_data())
+    exps = [Experiment(model=model, client_iters=shared, fed=FED,
+                       strategy="fedelmy", key=jax.random.PRNGKey(s))
+            for s in range(2)]
+    with pytest.raises(ValueError, match="share client iterator"):
+        run_batch(experiments=exps)
