@@ -23,7 +23,7 @@ import traceback
 BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
               "table4_order", "fig5_comm_cost", "fig6_compute_matched",
               "fig9_distance_measures", "fig10_pool_heatmap", "table9_pfl",
-              "scenario_grid", "local_phase", "roofline_report")
+              "scenario_grid", "local_phase", "roofline_report", "serving")
 
 
 def _list() -> None:
@@ -32,6 +32,7 @@ def _list() -> None:
     from repro.api import describe_strategies, list_pool_backends
     from repro.scenarios import (get_scenario, list_partitioners,
                                  list_scenarios)
+    from repro.serve import get_traffic, list_traffics
     print("benchmarks:")
     for name in BENCHMARKS:
         print(f"  {name}")
@@ -50,6 +51,11 @@ def _list() -> None:
     print("partitioners:")
     for name in list_partitioners():
         print(f"  {name}")
+    print("traffic specs:")
+    for name in list_traffics():
+        spec = get_traffic(name)
+        print(f"  {name} (arrival={spec.arrival}, "
+              f"client_mix={spec.client_mix})")
 
 
 def main() -> None:

@@ -1,0 +1,105 @@
+"""Serving benchmark: latency/throughput/accuracy of trained-pool serving.
+
+Measures the deployment side of the one-shot pipeline (DESIGN.md §10) on
+two clients of very different shape:
+
+* **probe MLP** — a real `fedelmy` run on the Dirichlet label-skew
+  scenario produces the pool; the same scenario's shards become the
+  query stream (Poisson arrivals, Dirichlet client mix), so
+  accuracy-under-traffic compares the three ways a one-shot artifact can
+  be served: the full pool ensemble, the pool collapsed to its mean
+  (`tree_mean`-style), and the chain's final handoff params (`last`).
+* **transformer** — a reduced `llama3.2-1b` pool (serving cost is a
+  property of the forward path, not of how the members were trained), a
+  steady token stream; latency/qps only. This exercises the
+  flash-attention routing inside the vmapped member axis.
+
+Emits `serving,us_per_call,derived` per the harness contract; the
+derived fields land in BENCH_baseline.json and are gated by
+scripts/bench_compare.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (SCALE, bench_spec, emit_csv, fed_config,
+                               probe_mlp_model, run_strategy)
+from repro.configs import get_arch
+from repro.core.pool import ModelPool
+from repro.models import build_model
+from repro.scenarios import materialize
+from repro.serve import PoolServer, get_traffic, materialize_trace, serve_trace
+
+
+def _probe_reports():
+    """Train one fedelmy run on the probe MLP, then serve its artifacts.
+
+    Queries are the clients' *held-out* val carves (val_frac) — serving
+    the training shards back saturates every mode at 1.0 — and the noise
+    sits where the probe can't memorize, so the three serving modes
+    separate measurably."""
+    model = probe_mlp_model()
+    spec = bench_spec("dir_label_skew", n_clients=2, batch_size=16,
+                      partitioner_params={"beta": 0.3}, noise=12.0,
+                      val_frac=0.25)
+    data = materialize(spec, seed=0)
+    fed = fed_config(n_clients=2, learning_rate=1e-2)
+    result = run_strategy("fedelmy", model, data.iterators(), fed)
+    pool = result.require_final_pool()
+
+    n_req = 256 if SCALE["n"] < 2000 else 512
+    traffic = get_traffic("poisson_skewed").replace(n_requests=n_req)
+    trace = materialize_trace(traffic, data.client_val, seed=0)
+
+    servers = {
+        "ensemble": PoolServer.from_result(model, result),
+        "pool_avg": PoolServer.from_params(model, pool.average()),
+        "last": PoolServer.from_result(model, result, source="params"),
+    }
+    return {name: serve_trace(srv, trace) for name, srv in servers.items()}
+
+
+def _transformer_report():
+    """Serve a reduced-transformer pool over a steady token stream."""
+    cfg = get_arch("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    pool = ModelPool.create(model.init(jax.random.PRNGKey(0)), 4)
+    for s in (1, 2):
+        pool = pool.append(model.init(jax.random.PRNGKey(s)))
+
+    seq = 64
+    rng = np.random.default_rng(0)
+    clients = [{"tokens": rng.integers(0, cfg.vocab_size,
+                                       size=(32, seq)).astype(np.int32)}
+               for _ in range(2)]
+    n_req = 48 if SCALE["n"] < 2000 else 96
+    traffic = get_traffic("steady_uniform").replace(
+        n_requests=n_req, mean_batch=4)
+    trace = materialize_trace(traffic, clients, seed=0)
+    server = PoolServer.from_pool(model, pool, buckets=(4,))
+    return serve_trace(server, trace)
+
+
+def run():
+    t0 = time.time()
+    probe = _probe_reports()
+    tf = _transformer_report()
+    ens, avg, last = probe["ensemble"], probe["pool_avg"], probe["last"]
+    emit_csv(
+        "serving", t0,
+        f"ensemble_p50_ms={ens.p50_ms:.3f};"
+        f"ensemble_p99_ms={ens.p99_ms:.3f};"
+        f"ensemble_qps={ens.qps:.0f};"
+        f"pool_avg_qps={avg.qps:.0f};last_qps={last.qps:.0f};"
+        f"acc_ensemble={ens.accuracy:.4f};acc_pool_avg={avg.accuracy:.4f};"
+        f"acc_last={last.accuracy:.4f};"
+        f"tf_p50_ms={tf.p50_ms:.3f};tf_p99_ms={tf.p99_ms:.3f};"
+        f"tf_qps={tf.qps:.0f}")
+
+
+if __name__ == "__main__":
+    run()

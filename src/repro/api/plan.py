@@ -366,11 +366,12 @@ def _interpret_independent(exp, plan: StrategyPlan,
                if block.kind == "custom" else None)
     outs: List[PyTree] = []
     clients: List[ClientRecord] = []
+    pool = None
     for ci, m0 in zip(sel, inits):
         it = exp.client_iters[ci]
         if plan.warmup == "per_client":
             m0 = _train_visit(trainer, m0, it, fed.e_warmup)
-        m, _, models = _run_block(trainer, block, m0, it, step_fn, exp)
+        m, pool, models = _run_block(trainer, block, m0, it, step_fn, exp)
         outs.append(m)
         if plan.records == "clients_noeval":
             rec = ClientRecord(client=int(ci), rank=int(ci), models=models)
@@ -378,7 +379,10 @@ def _interpret_independent(exp, plan: StrategyPlan,
             if exp.callbacks.on_client_end is not None:
                 exp.callbacks.on_client_end(rec, m)
     params = tree_mean(outs) if plan.aggregate == "tree_mean" else outs[-1]
-    return StrategyOutput(params=params, clients=clients)
+    # Like the sequenced interpreter, "final pool" means the last visited
+    # client's pool — the one whose diversity state is freshest.
+    return StrategyOutput(params=params, clients=clients,
+                          final_pool=pool if plan.keep_final_pool else None)
 
 
 # ---------------------------------------------------------------------------
@@ -524,10 +528,11 @@ def _interpret_independent_batched(exps, plan: StrategyPlan,
 
     block = plan.phases[0]
     recs: List[List[Any]] = [[] for _ in flat_iters]
+    pools = None
     if block.kind == "pool":
         alphas, betas = _alphas_betas(exps, repeat=n_sel)
-        flat, _, recs = _batched_pool_visit(trainer, flat, flat_iters,
-                                            alphas, betas, stacks)
+        flat, pools, recs = _batched_pool_visit(trainer, flat, flat_iters,
+                                                alphas, betas, stacks)
     else:
         step_fn = (block.batched_step_factory(trainer, exps, None)
                    if block.kind == "custom" else None)
@@ -544,5 +549,10 @@ def _interpret_independent_batched(exps, plan: StrategyPlan,
                        for k, c in enumerate(sel)]
         params = (tree_mean(slices) if plan.aggregate == "tree_mean"
                   else slices[-1])
-        outs.append(StrategyOutput(params=params, clients=clients))
+        # Matches _interpret_independent: the run's final pool is its last
+        # selected client's pool (flat index i*n_sel + n_sel - 1).
+        pool = (unstack_tree(pools, i * n_sel + n_sel - 1)
+                if plan.keep_final_pool and pools is not None else None)
+        outs.append(StrategyOutput(params=params, clients=clients,
+                                   final_pool=pool))
     return outs

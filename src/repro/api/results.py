@@ -69,6 +69,33 @@ class RunResult:
     wall_time_s: float = 0.0
     final_pool: Any = None           # last client's pool, if the strategy has one
 
+    def require_final_pool(self) -> Any:
+        """The trained pool, or a diagnosis of why there isn't one.
+
+        `final_pool` is None in two distinct situations; this accessor
+        tells them apart so serving code can fail with an actionable
+        message instead of a downstream attribute error.
+        """
+        if self.final_pool is not None:
+            return self.final_pool
+        from repro.api.strategies import get_strategy_spec
+        try:
+            plan = get_strategy_spec(self.strategy).plan
+        except (KeyError, ValueError):
+            plan = None
+        if plan is not None and not getattr(plan, "keep_final_pool", False):
+            raise ValueError(
+                f"strategy {self.strategy!r} discards its pool "
+                "(keep_final_pool=False in its StrategyPlan) — it only "
+                "produces an aggregated model. Serve that with "
+                "PoolServer.from_params(model, result.params) instead.")
+        raise ValueError(
+            f"run of {self.strategy!r} produced no pool (use_pool=False, "
+            "a custom strategy without pool blocks, or a result built "
+            "before pools were retained). Re-run with FedConfig("
+            "use_pool=True) or serve the aggregated params via "
+            "PoolServer.from_params(model, result.params).")
+
     def history(self) -> List[Dict[str, Any]]:
         """Legacy history dicts, matching the pre-`repro.api` drivers:
         per-shot records for few-shot runs, per-client records for

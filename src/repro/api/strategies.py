@@ -201,7 +201,8 @@ register_plan("fedelmy_pfl", StrategyPlan(
     topology=Topology("independent"),
     phases=(LocalBlock("pool"),),
     aggregate="tree_mean", broadcast="per_client_init",
-    warmup="per_client", records="clients_noeval"))
+    warmup="per_client", records="clients_noeval",
+    keep_final_pool=True))
 
 register_plan("fedseq", StrategyPlan(
     topology=Topology("chain", honors_order=True),

@@ -31,9 +31,7 @@ def save_pytree(path: str, tree: Any) -> None:
     np.savez(path, **_flatten(tree))
 
 
-def load_pytree(path: str, like: Any) -> Any:
-    with np.load(path) as data:
-        flat = dict(data)
+def _unflatten_like(flat: dict, like: Any) -> Any:
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
     new_leaves = []
     for p, leaf in leaves_with_path:
@@ -43,3 +41,59 @@ def load_pytree(path: str, like: Any) -> Any:
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         new_leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        flat = dict(data)
+    return _unflatten_like(flat, like)
+
+
+# -- trained-pool round-trip (the serving handoff) ---------------------------
+#
+# A pool is a pytree too, but loading one needs a template the caller
+# cannot easily build (the stacked capacity is a static property of the
+# saved members, and the two backends differ structurally), so the pool
+# round-trip carries its own metadata: the backend kind and, for the
+# stacked form, the capacity. `load_pool` rebuilds the template from a
+# bare params pytree and defers to the same flatten/unflatten core —
+# train → save → load → serve is bit-identical to train → serve.
+
+_KIND_KEY = "__pool_kind__"
+_CAPACITY_KEY = "__capacity__"
+
+
+def save_pool(path: str, pool: Any) -> None:
+    from repro.core.pool import ModelPool, MomentPool
+    flat = _flatten(pool)
+    if isinstance(pool, ModelPool):
+        flat[_KIND_KEY] = np.asarray("stacked")
+        flat[_CAPACITY_KEY] = np.asarray(pool.capacity)
+    elif isinstance(pool, MomentPool):
+        flat[_KIND_KEY] = np.asarray("moment")
+    else:
+        raise TypeError(
+            f"save_pool expects a ModelPool or MomentPool, got "
+            f"{type(pool).__name__}; bare pytrees go through save_pytree")
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_pool(path: str, params_like: Any) -> Any:
+    """Restore a pool saved by `save_pool`. `params_like` is a single
+    model's params pytree (shapes/dtypes only — e.g. `model.init(key)`);
+    the pool structure itself comes from the checkpoint metadata."""
+    from repro.core.pool import ModelPool, MomentPool
+    with np.load(path) as data:
+        flat = dict(data)
+    kind = str(flat.pop(_KIND_KEY, ""))
+    if kind == "stacked":
+        capacity = int(flat.pop(_CAPACITY_KEY))
+        like = ModelPool.create(params_like, capacity)
+    elif kind == "moment":
+        like = MomentPool.create(params_like)
+    else:
+        raise ValueError(
+            f"{path} is not a save_pool checkpoint (missing/unknown "
+            f"{_KIND_KEY}={kind!r}); plain pytrees load via load_pytree")
+    return _unflatten_like(flat, like)

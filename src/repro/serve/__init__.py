@@ -1,0 +1,21 @@
+"""Online serving for trained pools (DESIGN.md §10).
+
+The training side of this repo ends at a `RunResult`; this package is the
+deployment side the paper's artifact implies: a `PoolServer` compiles one
+jitted ensemble-scoring path over a trained pool, `TrafficSpec` /
+`materialize_trace` turn request load into declarative data the way
+`ScenarioSpec` does for heterogeneity, and `serve_trace` measures
+latency/throughput/accuracy under that load.
+"""
+from repro.serve.engine import DEFAULT_BUCKETS, PoolServer
+from repro.serve.metrics import ServeReport, serve_trace
+from repro.serve.traffic import (RequestTrace, TrafficSpec, get_traffic,
+                                 list_traffics, materialize_trace,
+                                 register_traffic)
+
+__all__ = [
+    "DEFAULT_BUCKETS", "PoolServer",
+    "ServeReport", "serve_trace",
+    "RequestTrace", "TrafficSpec", "get_traffic", "list_traffics",
+    "materialize_trace", "register_traffic",
+]

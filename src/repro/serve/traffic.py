@@ -1,0 +1,202 @@
+"""Declarative request streams: `TrafficSpec` → `materialize_trace`.
+
+Serving load is data, exactly like heterogeneity is data in
+`repro.scenarios`: a frozen `TrafficSpec` names an arrival process
+(steady / poisson / burst / ramp), the per-client query mix, and the
+stream length; `materialize_trace(spec, data, seed)` resolves it against
+a materialized scenario into a `RequestTrace` — a device-resident query
+pool plus per-tick request index arrays — deterministically in
+(spec, data, seed).
+
+The non-IID query mix reuses the training-side partitioners: a skewed
+mix runs `repro.data.partition.dirichlet_partition` over the request
+slots themselves (one pseudo-class, Dirichlet(β) proportions across
+clients), so "which client is querying" is drawn by the same machinery
+that skewed the training shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import Registry
+from repro.data.partition import dirichlet_partition
+
+Arrays = Dict[str, np.ndarray]
+
+ARRIVALS = ("steady", "poisson", "burst", "ramp")
+CLIENT_MIXES = ("uniform", "dirichlet")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """One serving workload, declaratively."""
+    name: str
+    arrival: str = "steady"       # ARRIVALS
+    n_requests: int = 512         # total stream length
+    mean_batch: int = 8           # requests per tick (arrival-shaped)
+    burst_factor: int = 8         # burst: mean_batch × factor spikes
+    burst_every: int = 10         # burst: spike every k-th tick
+    ramp_to: int = 32             # ramp: tick size grows 1 → ramp_to
+    client_mix: str = "uniform"   # CLIENT_MIXES
+    mix_beta: float = 0.3         # dirichlet mix concentration
+    max_batch: int = 128          # hard per-tick cap
+
+    def __post_init__(self):
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"unknown arrival {self.arrival!r}; expected "
+                             f"one of {ARRIVALS}")
+        if self.client_mix not in CLIENT_MIXES:
+            raise ValueError(f"unknown client_mix {self.client_mix!r}; "
+                             f"expected one of {CLIENT_MIXES}")
+        if self.n_requests < 1 or self.mean_batch < 1:
+            raise ValueError("n_requests and mean_batch must be >= 1")
+        if self.max_batch < self.mean_batch:
+            raise ValueError(f"max_batch={self.max_batch} < "
+                             f"mean_batch={self.mean_batch}")
+        if self.arrival == "burst" and self.burst_every < 1:
+            raise ValueError("burst_every must be >= 1")
+        if self.arrival == "ramp" and self.ramp_to < 1:
+            raise ValueError("ramp_to must be >= 1")
+
+    def replace(self, **kw) -> "TrafficSpec":
+        return dataclasses.replace(self, **kw)
+
+
+TRAFFICS = Registry("traffic spec")
+
+
+def register_traffic(spec: TrafficSpec) -> TrafficSpec:
+    TRAFFICS.register(spec.name, spec)
+    return spec
+
+
+def get_traffic(name: str) -> TrafficSpec:
+    return TRAFFICS.get(name)
+
+
+def list_traffics() -> List[str]:
+    return TRAFFICS.names()
+
+
+@dataclasses.dataclass
+class RequestTrace:
+    """A materialized stream: the flat device-resident query pool, the
+    per-request source bookkeeping, and per-tick index arrays (each an
+    int32 array of flat query-pool indices — what `PoolServer.score`
+    gathers on device)."""
+    spec: TrafficSpec
+    seed: int
+    arrays: Dict[str, Any]           # device query pool (no labels)
+    labels: Optional[np.ndarray]     # host-side gold, for accuracy
+    ticks: List[np.ndarray]
+    request_client: np.ndarray       # (n_requests,) source client per slot
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.request_client.shape[0])
+
+    def flat_index(self) -> np.ndarray:
+        """All request indices in arrival order."""
+        return np.concatenate(self.ticks)
+
+    def tick_sizes(self) -> List[int]:
+        return [len(t) for t in self.ticks]
+
+
+def _tick_sizes(spec: TrafficSpec, rng: np.random.Generator) -> List[int]:
+    """Arrival-process realization: per-tick request counts summing to
+    exactly n_requests. Empty ticks (a poisson draw of 0) carry no
+    requests and are dropped — there is nothing to time."""
+    sizes: List[int] = []
+    remaining, t = spec.n_requests, 0
+    while remaining > 0:
+        if spec.arrival == "steady":
+            b = spec.mean_batch
+        elif spec.arrival == "poisson":
+            b = int(rng.poisson(spec.mean_batch))
+        elif spec.arrival == "burst":
+            spike = (t % spec.burst_every) == spec.burst_every - 1
+            b = spec.mean_batch * (spec.burst_factor if spike else 1)
+        else:                          # ramp
+            b = min(spec.ramp_to, 1 + t)
+        t += 1
+        b = min(b, spec.max_batch, remaining)
+        if b > 0:
+            sizes.append(b)
+            remaining -= b
+    return sizes
+
+
+def _client_of_slot(spec: TrafficSpec, n_clients: int,
+                    seed: int) -> np.ndarray:
+    if spec.client_mix == "uniform":
+        return np.arange(spec.n_requests, dtype=np.int64) % n_clients
+    # Skewed mix: Dirichlet-partition the request slots across clients
+    # (one pseudo-class ⇒ pure Dirichlet(β) proportions, same code path
+    # as the training-side label skew).
+    parts = dirichlet_partition(np.zeros(spec.n_requests, np.int64),
+                                n_clients, beta=spec.mix_beta,
+                                seed=seed, min_size=1)
+    out = np.empty(spec.n_requests, np.int64)
+    for c, slots in enumerate(parts):
+        out[slots] = c
+    return out
+
+
+def materialize_trace(spec: TrafficSpec, data, seed: int = 0,
+                      label_key: str = "labels") -> RequestTrace:
+    """Resolve a spec against client data into a servable trace.
+
+    `data` is a `ScenarioData` (its `client_data` shards become the query
+    pool — queries are drawn from the same non-IID shards the clients
+    trained on) or a raw list of per-client array dicts (e.g. token
+    shards for a transformer client). Feature arrays are concatenated
+    into ONE flat pool and uploaded to device once; every request is an
+    index into it, so serving never re-uploads query bytes
+    (`data/plan.py`'s gather discipline). Labels, when present, stay on
+    host for accuracy-under-traffic scoring.
+    """
+    clients: List[Arrays] = getattr(data, "client_data", data)
+    if not clients:
+        raise ValueError("materialize_trace needs at least one client shard")
+    n_clients = len(clients)
+    keys = [k for k in clients[0] if k != label_key]
+    if not keys:
+        raise ValueError(f"client shards contain only {label_key!r}; "
+                         "nothing to serve")
+    flat = {k: np.concatenate([np.asarray(c[k]) for c in clients])
+            for k in keys}
+    labels = (np.concatenate([np.asarray(c[label_key]) for c in clients])
+              if label_key in clients[0] else None)
+    sizes = np.array([len(next(iter(c.values()))) for c in clients])
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+
+    rng = np.random.default_rng(seed)
+    request_client = _client_of_slot(spec, n_clients, seed)
+    within = rng.integers(0, sizes[request_client])
+    flat_idx = (offsets[request_client] + within).astype(np.int32)
+
+    ticks, start = [], 0
+    for b in _tick_sizes(spec, rng):
+        ticks.append(flat_idx[start:start + b])
+        start += b
+
+    device = {k: jnp.asarray(v) for k, v in flat.items()}
+    req_labels = labels[flat_idx] if labels is not None else None
+    return RequestTrace(spec=spec, seed=seed, arrays=device,
+                        labels=req_labels, ticks=ticks,
+                        request_client=request_client)
+
+
+# -- built-in workloads ------------------------------------------------------
+
+register_traffic(TrafficSpec("steady_uniform"))
+register_traffic(TrafficSpec("poisson_skewed", arrival="poisson",
+                             client_mix="dirichlet", mix_beta=0.3))
+register_traffic(TrafficSpec("burst", arrival="burst", burst_factor=8,
+                             burst_every=10))
+register_traffic(TrafficSpec("ramp", arrival="ramp", ramp_to=32))

@@ -134,11 +134,14 @@ def legacy_fedelmy_fewshot(exp):
 def legacy_fedelmy_pfl(exp):
     trainer = LocalTrainer(exp.model.loss_fn, exp.fed)
     n = len(exp.client_iters)
-    avgs, clients = [], []
+    avgs, clients, pool = [], [], None
     for ci, keyc in enumerate(jax.random.split(exp.resolved_key(), n)):
         m0 = exp.model.init(keyc)
         m0, _ = trainer.train(m0, exp.client_iters[ci], exp.fed.e_warmup)
-        m_avg, _, models = trainer.local_client_train(
+        # Contract amendment (serve PR): pfl now keeps the last client's
+        # pool like the sequential strategies do, so trained pools can be
+        # handed to PoolServer. Params math is untouched.
+        m_avg, pool, models = trainer.local_client_train(
             m0, exp.client_iters[ci],
             on_model_end=exp.callbacks.on_model_end)
         avgs.append(m_avg)
@@ -146,7 +149,8 @@ def legacy_fedelmy_pfl(exp):
         clients.append(rec)
         if exp.callbacks.on_client_end is not None:
             exp.callbacks.on_client_end(rec, m_avg)
-    return StrategyOutput(params=tree_mean(avgs), clients=clients)
+    return StrategyOutput(params=tree_mean(avgs), clients=clients,
+                          final_pool=pool)
 
 
 def legacy_fedseq(exp):

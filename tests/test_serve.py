@@ -1,0 +1,377 @@
+"""Tests for the serving subsystem (`repro.serve`, DESIGN.md §10).
+
+Five groups:
+
+1. *Scoring bit-identity* — `PoolServer` ensemble scoring equals the
+   per-model eval reference (a python loop of single-member `forward`
+   calls + the pinned masked-weighted-mean expression) bit-for-bit, for
+   both pool backends, on a pool trained by a real `fedelmy` run.
+2. *Bucketing* — property test: the bucketed `score` path never changes
+   outputs vs unbatched `score_batch` on the same gathered rows, for any
+   request count (padding rows are never scored).
+3. *Pool handoff* — every plan strategy with `keep_final_pool` exposes
+   `final_pool` (sequential AND batched interpreters, uniformly);
+   `require_final_pool` raises the discarded-pool diagnosis otherwise.
+4. *Checkpoint round-trip* — train → save_pool → load_pool → serve is
+   bit-identical to train → serve, both backends.
+5. *Traffic determinism* — materialized traces are pure functions of
+   (spec, data, seed); arrival processes conserve request counts.
+"""
+import dataclasses
+import itertools
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.api import Experiment, run, run_batch
+from repro.api.strategies import get_plan, list_strategies
+from repro.checkpoint import load_pool, save_pool
+from repro.configs import FedConfig
+from repro.core.pool import ModelPool, MomentPool
+from repro.serve import (PoolServer, TrafficSpec, get_traffic, list_traffics,
+                         materialize_trace, serve_trace)
+
+KEY = jax.random.PRNGKey(0)
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _tiny_model():
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (4, 3)),
+                "b": jnp.zeros((3,))}
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(batch["y"], 3)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    def forward(params, batch):
+        return batch["x"] @ params["w"] + params["b"]
+
+    return TinyModel(init, loss_fn, forward)
+
+
+def _client_iter(seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 4))
+    y = jnp.arange(8) % 3
+    return itertools.cycle([{"x": x, "y": y}])
+
+
+def _iters(n=2):
+    return [_client_iter(i) for i in range(n)]
+
+
+def _clients(n=2, per=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"x": rng.normal(size=(per, 4)).astype(np.float32),
+             "labels": rng.integers(0, 3, size=per)} for _ in range(n)]
+
+
+FED = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                learning_rate=1e-2)
+FED_MOMENT = dataclasses.replace(FED, pool_backend="moment",
+                                 distance_measure="squared_l2")
+
+
+def _trained_pool(fed=FED):
+    model = _tiny_model()
+    result = run(Experiment(model=model, client_iters=_iters(), fed=fed,
+                            strategy="fedelmy", key=KEY))
+    return model, result
+
+
+def _assert_trees_bitwise_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# 1. Ensemble scoring == per-model eval reference, bit-for-bit
+# ---------------------------------------------------------------------------
+
+def _reference_scores(model, members, weights, batch):
+    """The pinned serving reference: per-member forward in a python loop,
+    masked weighted mean of logits."""
+    P = jax.tree.leaves(members)[0].shape[0]
+    logits = jnp.stack([model.forward(
+        jax.tree.map(lambda a: a[i], members), batch) for i in range(P)])
+    w = weights.reshape((P,) + (1,) * (logits.ndim - 1))
+    return (w * logits).sum(0) / weights.sum()
+
+
+@pytest.mark.parametrize("fed", [FED, FED_MOMENT],
+                         ids=["stacked", "moment"])
+def test_single_request_scoring_matches_per_model_eval(fed):
+    model, result = _trained_pool(fed)
+    server = PoolServer.from_result(model, result)
+    batch = {"x": jnp.asarray(
+        np.random.default_rng(3).normal(size=(1, 4)).astype(np.float32))}
+    scores, preds = server.score_batch(batch)
+    ref = _reference_scores(model, server.members, server.weights, batch)
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(preds),
+                                  np.argmax(np.asarray(ref), -1))
+
+
+def test_stacked_pool_serves_every_live_member():
+    model, result = _trained_pool(FED)
+    pool = result.final_pool
+    server = PoolServer.from_result(model, result)
+    assert isinstance(pool, ModelPool)
+    assert server.n_members == int(pool.count)
+    _assert_trees_bitwise_equal(server.members, pool.members)
+
+
+def test_moment_pool_serves_the_running_mean():
+    model, result = _trained_pool(FED_MOMENT)
+    pool = result.final_pool
+    assert isinstance(pool, MomentPool)
+    server = PoolServer.from_result(model, result)
+    assert server.n_members == 1
+    _assert_trees_bitwise_equal(
+        server.members, jax.tree.map(lambda a: a[None], pool.average()))
+
+
+def test_majority_vote_and_weight_hook():
+    model, result = _trained_pool(FED)
+    batch = {"x": jnp.asarray(
+        np.random.default_rng(5).normal(size=(6, 4)).astype(np.float32))}
+    mv = PoolServer.from_result(model, result, mode="majority_vote")
+    votes, preds = mv.score_batch(batch)
+    # vote mass equals the number of live members, for every request
+    np.testing.assert_allclose(np.asarray(votes).sum(-1), mv.n_members,
+                               rtol=1e-6)
+    # the density-weighting hook: zeroing all but one member makes the
+    # ensemble that single member
+    pool = result.final_pool
+    only0 = np.zeros(pool.capacity, np.float32)
+    only0[0] = 1.0
+    wsrv = PoolServer.from_result(model, result, weights=jnp.asarray(only0))
+    scores, _ = wsrv.score_batch(batch)
+    member0 = model.forward(jax.tree.map(lambda a: a[0], pool.members),
+                            batch)
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(member0))
+    # weight_fn form receives (members, mask)
+    fsrv = PoolServer.from_result(
+        model, result, weight_fn=lambda members, mask: mask * 2.0)
+    s2, _ = fsrv.score_batch(batch)
+    base, _ = PoolServer.from_result(model, result).score_batch(batch)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(base))
+
+
+def test_from_params_collapsed_serving():
+    model, result = _trained_pool(FED)
+    server = PoolServer.from_result(model, result, source="params")
+    assert server.n_members == 1
+    batch = {"x": jnp.asarray(
+        np.random.default_rng(7).normal(size=(3, 4)).astype(np.float32))}
+    scores, _ = server.score_batch(batch)
+    np.testing.assert_array_equal(
+        np.asarray(scores), np.asarray(model.forward(result.params, batch)))
+
+
+# ---------------------------------------------------------------------------
+# 2. Bucketed batching never changes outputs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=40), seed=st.integers(0, 100))
+def test_bucketed_scoring_matches_unbatched(n, seed):
+    model, result = _BUCKET_FIXTURE["trained"]
+    server = _BUCKET_FIXTURE["server"]
+    arrays = _BUCKET_FIXTURE["arrays"]
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, jax.tree.leaves(arrays)[0].shape[0],
+                       size=n).astype(np.int32)
+    scores, preds = server.score(arrays, idx)
+    gathered = {k: a[jnp.asarray(idx)] for k, a in arrays.items()}
+    ref_scores, ref_preds = server.score_batch(gathered)
+    np.testing.assert_array_equal(scores, np.asarray(ref_scores))
+    np.testing.assert_array_equal(preds, np.asarray(ref_preds))
+
+
+def _bucket_fixture():
+    model, result = _trained_pool(FED)
+    server = PoolServer.from_result(model, result, buckets=(1, 4, 16))
+    rng = np.random.default_rng(11)
+    arrays = {"x": jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))}
+    return {"trained": (model, result), "server": server, "arrays": arrays}
+
+
+_BUCKET_FIXTURE = _bucket_fixture()
+
+
+def test_bucket_ladder():
+    server = _BUCKET_FIXTURE["server"]
+    assert server.bucket_for(1) == 1
+    assert server.bucket_for(3) == 4
+    assert server.bucket_for(16) == 16
+    assert server.bucket_for(17) == 16      # beyond the ladder: chunked
+    assert server.chunk_plan(37) == [(0, 16, 16), (16, 16, 16), (32, 5, 16)]
+
+
+# ---------------------------------------------------------------------------
+# 3. Pool handoff across strategies
+# ---------------------------------------------------------------------------
+
+def _pool_strategies():
+    return [name for name in list_strategies()
+            if get_plan(name) is not None
+            and get_plan(name).keep_final_pool]
+
+
+def test_pool_strategy_inventory():
+    """Every plan whose local block is a pool keeps its final pool —
+    the audit this PR's handoff satellite pins."""
+    for name in list_strategies():
+        plan = get_plan(name)
+        if plan is None:
+            continue
+        has_pool_block = any(b.kind == "pool" for b in plan.phases)
+        assert plan.keep_final_pool == has_pool_block, name
+
+
+@pytest.mark.parametrize("name", ["fedelmy", "fedelmy_fewshot",
+                                  "fedelmy_pfl"])
+def test_final_pool_exposed_sequential_and_batched(name):
+    assert name in _pool_strategies()
+    model = _tiny_model()
+    kw = dict(model=model, fed=FED, strategy=name)
+    if name == "fedelmy_fewshot":
+        kw["shots"] = 2
+    res = run(Experiment(client_iters=_iters(), key=KEY, **kw))
+    assert res.final_pool is not None
+    assert res.require_final_pool() is res.final_pool
+    batch = run_batch(
+        experiments=[Experiment(client_iters=_iters(),
+                                key=jax.random.PRNGKey(s), **kw)
+                     for s in (0, 1)])
+    for r in batch:
+        assert r.final_pool is not None, name
+    _assert_trees_bitwise_equal(batch[0].final_pool, res.final_pool, name)
+
+
+def test_require_final_pool_diagnoses_discarding_plan():
+    model = _tiny_model()
+    res = run(Experiment(model=model, client_iters=_iters(), fed=FED,
+                         strategy="fedseq", key=KEY))
+    with pytest.raises(ValueError, match="discards its pool"):
+        res.require_final_pool()
+
+
+def test_require_final_pool_diagnoses_poolless_run():
+    from repro.api.results import RunResult
+    res = RunResult(strategy="custom_thing", params={}, fed=FED)
+    with pytest.raises(ValueError, match="produced no pool"):
+        res.require_final_pool()
+
+
+# ---------------------------------------------------------------------------
+# 4. Checkpoint round-trip: train → save → load → serve ≡ train → serve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fed", [FED, FED_MOMENT],
+                         ids=["stacked", "moment"])
+def test_pool_checkpoint_roundtrip_serves_bit_identical(fed, tmp_path):
+    model, result = _trained_pool(fed)
+    pool = result.require_final_pool()
+    path = str(tmp_path / "pool.npz")
+    save_pool(path, pool)
+    restored = load_pool(path, model.init(KEY))
+    assert type(restored) is type(pool)
+    _assert_trees_bitwise_equal(pool, restored)
+
+    direct = PoolServer.from_pool(model, pool)
+    served = PoolServer.from_checkpoint(model, path, model.init(KEY))
+    arrays = {"x": jnp.asarray(np.random.default_rng(2).normal(
+        size=(30, 4)).astype(np.float32))}
+    idx = np.arange(9, dtype=np.int32)
+    s1, p1 = direct.score(arrays, idx)
+    s2, p2 = served.score(arrays, idx)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_save_pool_rejects_bare_pytrees(tmp_path):
+    with pytest.raises(TypeError, match="save_pytree"):
+        save_pool(str(tmp_path / "x.npz"), {"w": np.zeros(3)})
+
+
+def test_load_pool_rejects_plain_checkpoints(tmp_path):
+    from repro.checkpoint import save_pytree
+    path = str(tmp_path / "params.npz")
+    save_pytree(path, {"w": np.zeros(3)})
+    with pytest.raises(ValueError, match="load_pytree"):
+        load_pool(path, {"w": np.zeros(3)})
+
+
+# ---------------------------------------------------------------------------
+# 5. Traffic determinism + conservation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["steady_uniform", "poisson_skewed",
+                                  "burst", "ramp"])
+def test_traces_deterministic_and_conserving(name):
+    spec = get_traffic(name).replace(n_requests=100)
+    clients = _clients()
+    t1 = materialize_trace(spec, clients, seed=3)
+    t2 = materialize_trace(spec, clients, seed=3)
+    assert sum(t1.tick_sizes()) == 100
+    assert all(0 < s <= spec.max_batch for s in t1.tick_sizes())
+    np.testing.assert_array_equal(t1.flat_index(), t2.flat_index())
+    np.testing.assert_array_equal(t1.request_client, t2.request_client)
+    t3 = materialize_trace(spec, clients, seed=4)
+    assert not np.array_equal(t1.flat_index(), t3.flat_index())
+
+
+def test_dirichlet_mix_skews_clients():
+    spec = TrafficSpec("t", client_mix="dirichlet", mix_beta=0.1,
+                       n_requests=400)
+    trace = materialize_trace(spec, _clients(n=4), seed=0)
+    counts = np.bincount(trace.request_client, minlength=4)
+    assert counts.sum() == 400
+    assert counts.max() > 2 * counts.min()   # β=0.1 is strongly skewed
+
+
+def test_trafficspec_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        TrafficSpec("t", arrival="flood")
+    with pytest.raises(ValueError, match="client_mix"):
+        TrafficSpec("t", client_mix="zipf")
+    with pytest.raises(ValueError, match="max_batch"):
+        TrafficSpec("t", mean_batch=64, max_batch=8)
+
+
+def test_serve_trace_reports_accuracy_and_latency():
+    model, result = _trained_pool(FED)
+    server = PoolServer.from_result(model, result)
+    spec = get_traffic("steady_uniform").replace(n_requests=64)
+    trace = materialize_trace(spec, _clients(per=30), seed=1)
+    report = serve_trace(server, trace)
+    assert report.n_requests == 64
+    assert report.qps > 0
+    assert report.p50_ms <= report.p95_ms <= report.p99_ms
+    assert 0.0 <= report.accuracy <= 1.0
+    assert report.n_members == server.n_members
+    # reported predictions come from the same scoring path
+    row = report.row()
+    assert row["traffic"] == "steady_uniform" and row["mode"] == "mean_logits"
+
+
+def test_builtin_traffics_registered():
+    assert {"steady_uniform", "poisson_skewed", "burst",
+            "ramp"} <= set(list_traffics())
