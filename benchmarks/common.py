@@ -20,7 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.api import BatchAxes, Experiment, run, run_batch
+from repro.api import BatchAxes, Experiment, launch
 from repro.configs import FedConfig, get_arch
 from repro.models import build_model
 from repro.scenarios import get_scenario, materialize
@@ -53,19 +53,19 @@ def fed_config(**kw) -> FedConfig:
 def run_strategy(strategy: str, model, iters, fed: FedConfig, seed=0, **kw):
     """One-liner over the engine: every benchmark invokes every method
     through the same registry path."""
-    return run(Experiment(model=model, client_iters=iters, fed=fed,
-                          strategy=strategy, key=jax.random.PRNGKey(seed),
-                          **kw))
+    return launch(Experiment(model=model, client_iters=iters, fed=fed,
+                             strategy=strategy, key=jax.random.PRNGKey(seed),
+                             **kw))
 
 
 def run_strategy_batch(strategy: str, model, fed: FedConfig, *,
                        seeds=None, fed_grid=None, iters_for_seed=None,
                        eval_for_seed=None, iters_for_run=None, iters=None,
                        **kw):
-    """Sweep entry point over `api.run_batch`: compatible runs execute as
-    one vmapped program (see DESIGN.md §6). The factories regenerate
-    per-seed / per-run data and eval — stateful iterators must not be
-    shared across runs of a batch."""
+    """Sweep entry point over `api.launch(exp, axes=...)`: compatible runs
+    execute as one vmapped program (see DESIGN.md §6). The factories
+    regenerate per-seed / per-run data and eval — stateful iterators must
+    not be shared across runs of a batch."""
     if iters is not None:
         first = iters
     elif iters_for_run is not None:
@@ -74,7 +74,7 @@ def run_strategy_batch(strategy: str, model, fed: FedConfig, *,
         first = iters_for_seed(seeds[0] if seeds else 0)
     base = Experiment(model=model, client_iters=first, fed=fed,
                       strategy=strategy, **kw)
-    return run_batch(base, axes=BatchAxes(
+    return launch(base, axes=BatchAxes(
         seeds=list(seeds) if seeds is not None else None,
         fed_grid=fed_grid,
         client_iters_for_seed=iters_for_seed,
@@ -102,8 +102,8 @@ def setup_from_spec(spec, seed=0, model=None):
     if model is None:
         model = build_model(get_arch("paper-cnn"))
     data = materialize(spec, seed)
-    return model, data.iterators(scan=False), _acc_fn(model,
-                                                      data.eval_dataset())
+    return model, data.streams(scan=False), _acc_fn(model,
+                                                    data.eval_dataset())
 
 
 def label_skew_setup(n_clients=4, beta=0.3, seed=0):
@@ -172,7 +172,7 @@ def probe_mlp_setup(n_clients=4, beta=0.3, seed=0, width=64, batch=16):
         # same seeds for every run: fresh DataPlan cursors per call over
         # the one device-resident upload, an identical batch stream per
         # run, so grid runs differ ONLY in (α, β)
-        return data.iterators()
+        return data.streams()
 
     return model, iters_for_run, _acc_fn(model, data.eval_dataset())
 

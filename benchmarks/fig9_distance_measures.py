@@ -1,7 +1,7 @@
 """Paper Fig. 9: diversity-control measure ablation (L2 vs L1 vs cosine vs
 squared-L2/moment). Claim: L2 best, all beat the no-regularizer pool.
 
-Runs through `api.run_batch` with an explicit experiment list: the measure
+Runs through `api.launch` with an explicit experiment list: the measure
 axis changes the compiled step graph (static FedConfig field), so each
 measure is its own compiled group — the uniform sweep API still applies,
 and the engine reports the group count it actually compiled."""
@@ -13,7 +13,7 @@ import jax
 
 from benchmarks.common import (emit_csv, fed_config, label_skew_setup,
                                save_result)
-from repro.api import Experiment, run_batch
+from repro.api import Experiment, launch
 
 MEASURES = ("l2", "l1", "cosine", "squared_l2")
 
@@ -31,7 +31,7 @@ def run():
                                strategy="fedelmy",
                                key=jax.random.PRNGKey(0)))
         accs.append(acc)
-    batch = run_batch(experiments=exps)
+    batch = launch(exps)
     rows = [{"measure": measure, "acc": float(acc(res.params))}
             for measure, acc, res in zip(MEASURES + ("none",), accs, batch)]
     for r in rows:

@@ -1,0 +1,74 @@
+"""fleet_throughput: streaming-cohort fleet execution (DESIGN.md §11).
+
+The fleet path's claim is that population scale costs nothing per round
+beyond the cohort itself: a 10⁵-client `FleetSpec` draws a seeded cohort
+per round, materializes only that cohort's shards, and executes the
+whole cohort as ONE compiled program — the compiled step is keyed on
+(loss_fn, fed, shapes), so every cohort of every round reuses the first
+round's compile. This benchmark runs the probe MLP over a
+`fleet_100k`-derived spec and reports **clients/sec at fixed accuracy**:
+
+* `clients_per_s` — trained clients over summed round wall time (the
+  headline metric, gated against BENCH_baseline.json like every other
+  benchmark via scripts/bench_compare.py);
+* `acc` — final global accuracy on the fleet's held-out set, asserted
+  above ACC_FLOOR so a "fast" regression that stops learning fails
+  loudly;
+* `cache_growth` — growth of the trainer's compiled-step caches between
+  round 0 and the remaining rounds, asserted 0: one program per cohort,
+  reused, never recompiled.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import SCALE, emit_csv, fed_config, probe_mlp_model, \
+    save_result
+from repro.api import launch, trainer as trainer_mod
+from repro.scenarios import get_fleet
+
+ACC_FLOOR = 0.85          # probe fleet data is easy; below this = broken
+
+
+def _cache_size() -> int:
+    return (len(trainer_mod._STEP_CACHE)
+            + len(trainer_mod._SHARDED_CACHE))
+
+
+def run():
+    t0 = time.time()
+    model = probe_mlp_model()
+    quick = SCALE["n"] < 2000
+    fleet = get_fleet("fleet_100k").replace(
+        cohort_size=8 if quick else 16,
+        rounds=3 if quick else 4,
+        samples_per_client=32 if quick else 64)
+    fed = fed_config(n_clients=fleet.cohort_size)
+
+    # round 0 alone pays the compile; the remaining rounds must reuse it
+    launch(fleet.replace(rounds=1), model, fed=fed)
+    warm = _cache_size()
+    res = launch(fleet, model, fed=fed)
+    cache_growth = _cache_size() - warm
+    assert cache_growth == 0, (
+        f"fleet rounds recompiled: caches grew by {cache_growth} — "
+        "the one-program-per-cohort contract is broken")
+    assert res.final_metric is not None and res.final_metric >= ACC_FLOOR, \
+        f"fleet accuracy {res.final_metric} below floor {ACC_FLOOR}"
+
+    cps = res.clients_per_s()
+    rows = [{"round": c.round, "clients": len(c.clients),
+             "wall_time_s": c.wall_time_s, "acc": c.global_metric}
+            for c in res.cohorts]
+    save_result("fleet_throughput", rows)
+    print(f"fleet_throughput: fleet={fleet.fleet_size} "
+          f"cohort={fleet.cohort_size} rounds={fleet.rounds} "
+          f"{cps:.1f} clients/s acc={res.final_metric:.3f}", flush=True)
+    emit_csv("fleet_throughput", t0,
+             f"clients_per_s={cps:.1f};acc={res.final_metric:.3f};"
+             f"fleet_size={fleet.fleet_size};cache_growth={cache_growth}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

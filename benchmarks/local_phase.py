@@ -44,8 +44,8 @@ def run():
     m0 = model.init(jax.random.PRNGKey(0))
     steps_per_phase = fed.pool_size * fed.e_local
 
-    it = data.batch_iterators()[0]
-    plan = data.iterators()[0]
+    it = data.streams(device=False)[0]
+    plan = data.streams()[0]
 
     # compile + warm both paths before timing
     jax.block_until_ready(trainer.local_client_train(m0, it)[0])

@@ -23,15 +23,16 @@ import traceback
 BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
               "table4_order", "fig5_comm_cost", "fig6_compute_matched",
               "fig9_distance_measures", "fig10_pool_heatmap", "table9_pfl",
-              "scenario_grid", "local_phase", "roofline_report", "serving")
+              "scenario_grid", "local_phase", "roofline_report", "serving",
+              "fleet_throughput")
 
 
 def _list() -> None:
     """Enumerate registered benchmarks, strategies (with their plan
     topology/aggregation), pool backends, scenarios, and partitioners."""
     from repro.api import describe_strategies, list_pool_backends
-    from repro.scenarios import (get_scenario, list_partitioners,
-                                 list_scenarios)
+    from repro.scenarios import (get_fleet, get_scenario, list_fleets,
+                                 list_partitioners, list_scenarios)
     from repro.serve import get_traffic, list_traffics
     print("benchmarks:")
     for name in BENCHMARKS:
@@ -51,6 +52,12 @@ def _list() -> None:
     print("partitioners:")
     for name in list_partitioners():
         print(f"  {name}")
+    print("fleets:")
+    for name in list_fleets():
+        spec = get_fleet(name)
+        print(f"  {name} (fleet_size={spec.fleet_size}, "
+              f"cohort={spec.cohort_size}, rounds={spec.rounds}, "
+              f"participation={spec.participation})")
     print("traffic specs:")
     for name in list_traffics():
         spec = get_traffic(name)

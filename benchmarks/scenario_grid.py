@@ -1,5 +1,5 @@
 """Scenario grid: four heterogeneity families × four strategies, each
-family's sweep compiled through `api.run_batch` as one group per strategy.
+family's sweep compiled through `api.launch` as one group per strategy.
 
 This is the subsystem the one-shot FL surveys (arXiv:2505.02426,
 arXiv:2502.09104) ask for and the paper doesn't cover: label skew beyond
@@ -26,7 +26,7 @@ import numpy as np
 
 from benchmarks.common import (bench_spec, emit_csv, fed_config,
                                probe_mlp_model, save_result)
-from repro.scenarios import run_scenario
+from repro.api import launch
 
 FAMILY_SCENARIOS = ("dir_label_skew", "pathological_shards",
                     "quantity_skew", "feature_shift_ladder")
@@ -42,8 +42,8 @@ def run():
     total_groups = 0
     for name in FAMILY_SCENARIOS:
         spec = bench_spec(name, batch_size=16)
-        batch = run_scenario(spec, model, fed=fed, strategies=STRATEGIES,
-                             seeds=SEEDS)
+        batch = launch(spec, model, fed=fed, strategies=STRATEGIES,
+                       seeds=SEEDS)
         total_groups += batch.n_compiled_groups
         row = {"scenario": name, "family": spec.family,
                "n_compiled_groups": batch.n_compiled_groups}

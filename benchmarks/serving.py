@@ -48,7 +48,7 @@ def _probe_reports():
                       val_frac=0.25)
     data = materialize(spec, seed=0)
     fed = fed_config(n_clients=2, learning_rate=1e-2)
-    result = run_strategy("fedelmy", model, data.iterators(), fed)
+    result = run_strategy("fedelmy", model, data.streams(), fed)
     pool = result.require_final_pool()
 
     n_req = 256 if SCALE["n"] < 2000 else 512

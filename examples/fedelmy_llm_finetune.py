@@ -18,7 +18,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.api import Experiment, run
+from repro.api import Experiment, launch
 from repro.configs import FedConfig, get_arch
 from repro.data import batch_iterator, make_lm_dataset
 from repro.models import build_model
@@ -61,9 +61,9 @@ def main():
                     e_warmup=max(10, args.steps // 3), learning_rate=3e-4,
                     alpha=0.06, beta=1.0)
     t0 = time.time()
-    res = run(Experiment(model=model, client_iters=iters, fed=fed,
-                         strategy="fedelmy", key=jax.random.PRNGKey(0),
-                         eval_fn=neg_ppl))
+    res = launch(Experiment(model=model, client_iters=iters, fed=fed,
+                            strategy="fedelmy", key=jax.random.PRNGKey(0),
+                            eval_fn=neg_ppl))
     m = res.params
     for c in res.clients:
         print(f"after client {c.client}: held-out ppl "

@@ -7,14 +7,14 @@ Four clients hold Dirichlet(0.3)-skewed shards of a 10-class image task;
 the model chain visits each client once (one-shot SFL). Each client trains
 a pool of S=3 models under the d1/d2 diversity objective (paper Eq. 9) and
 forwards the pool average. Every method — FedELMY and the FedSeq baseline
-alike — runs via ``api.run(Experiment(strategy=...))``; swap the strategy
+alike — runs via ``api.launch(Experiment(strategy=...))``; swap the strategy
 string for any name in ``api.list_strategies()``, or the pool
 representation via ``FedConfig(pool_backend=...)``.
 """
 import jax
 import jax.numpy as jnp
 
-from repro.api import Experiment, run
+from repro.api import Experiment, launch
 from repro.configs import FedConfig, get_arch
 from repro.data import batch_iterator, dirichlet_partition, make_image_dataset
 from repro.models import build_model
@@ -38,17 +38,17 @@ def main():
     fed = FedConfig(n_clients=4, pool_size=3, e_local=25, e_warmup=10,
                     learning_rate=1e-3, alpha=0.06, beta=1.0)
 
-    res = run(Experiment(model=model, client_iters=iters, fed=fed,
-                         strategy="fedelmy", key=jax.random.PRNGKey(0),
-                         eval_fn=accuracy))
+    res = launch(Experiment(model=model, client_iters=iters, fed=fed,
+                            strategy="fedelmy", key=jax.random.PRNGKey(0),
+                            eval_fn=accuracy))
     for c in res.clients:
         print(f"after client {c.client}: global acc {c.global_metric:.3f}")
     print(f"FedELMY final accuracy: {res.final_metric:.3f} "
           f"({res.wall_time_s:.0f}s)")
 
-    seq = run(Experiment(model=model, client_iters=iters, fed=fed,
-                         strategy="fedseq", key=jax.random.PRNGKey(0),
-                         eval_fn=accuracy))
+    seq = launch(Experiment(model=model, client_iters=iters, fed=fed,
+                            strategy="fedseq", key=jax.random.PRNGKey(0),
+                            eval_fn=accuracy))
     print(f"FedSeq  final accuracy: {seq.final_metric:.3f}")
     print("communication: both methods used exactly N-1 = 3 model transfers")
 

@@ -3,10 +3,12 @@
 #   tier-1 pytest + a quick benchmark smoke through the repro.api engine.
 #
 #   scripts/check.sh          # full suite + table1 + local_phase + serving
+#                             # + fleet_throughput
 #   scripts/check.sh --fast   # CI tier-1 leg: pytest -m "not slow" plus the
-#                             # fig10 run_batch + local_phase + serving
-#                             # smokes (dispatch-bound probe, ~1 min each)
-#                             # instead of the ~9 min table1 sweep
+#                             # fig10 sweep + local_phase + serving +
+#                             # fleet_throughput smokes (dispatch-bound
+#                             # probe, ~1 min each) instead of the ~9 min
+#                             # table1 sweep
 #
 # The benchmark smoke writes bench_smoke.csv (harness CSV) and
 # bench_smoke.json (per-benchmark us_per_call, diffable against
@@ -17,12 +19,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 PYTEST_ARGS=(-x -q)
-SMOKE=table1_accuracy,local_phase,serving
+SMOKE=table1_accuracy,local_phase,serving,fleet_throughput
 FAST=0
 for arg in "$@"; do
   case "$arg" in
     --fast) FAST=1; PYTEST_ARGS+=(-m "not slow")
-            SMOKE=fig10_pool_heatmap,local_phase,serving ;;
+            SMOKE=fig10_pool_heatmap,local_phase,serving,fleet_throughput ;;
     *) echo "unknown flag: $arg (expected --fast)" >&2; exit 2 ;;
   esac
 done

@@ -1,13 +1,17 @@
-"""`repro.api` — the unified federated-run engine (see DESIGN.md §2, §6, §8).
+"""`repro.api` — the unified federated-run engine (see DESIGN.md §2, §6,
+§8, §11).
 
-Two entry points, three registries, one IR:
+One front door, three registries, one IR:
 
-* ``run(Experiment(...)) -> RunResult`` — executes any registered
-  strategy and returns typed records.
-* ``run_batch(Experiment, axes=BatchAxes(...)) -> BatchResult`` —
-  executes a sweep (seeds, (α, β) grids, strategy options), batching
-  compatible runs into single vmapped programs; per-run results are
-  bit-identical to sequential ``run``.
+* ``launch(target, ...)`` — THE entry point: dispatches on an
+  Experiment (single run), an Experiment + BatchAxes or a list of
+  Experiments (batched sweep), a ScenarioSpec (compiled scenario), a
+  FleetSpec (streaming cohort rounds over a 10⁵–10⁶ fleet), or a
+  registered scenario/fleet name — and always returns a typed result
+  (RunResult | BatchResult | FleetResult).
+* ``run`` / ``run_batch`` (and ``scenarios.run_scenario``) — deprecated
+  thin wrappers over the same implementations, bit-identical to the
+  matching ``launch`` dispatch.
 * Strategy-plan IR — ``StrategyPlan`` (topology / local blocks /
   aggregate / broadcast) registered via ``register_plan``; one
   interpreter (``repro.api.plan``) executes every plan sequentially or
@@ -30,12 +34,14 @@ dispatch per SGD step — bit-identical results, no host round-trips
 """
 from repro.api.batch import BatchAxes, run_batch
 from repro.api.engine import Callbacks, Experiment, run
+from repro.api.launch import launch
 from repro.api.plan import (LocalBlock, StrategyPlan, Topology, interpret,
                             interpret_batched, tree_mean)
 from repro.api.pools import (PoolBackend, backend_for, get_pool_backend,
                              list_pool_backends, register_pool_backend)
-from repro.api.results import (BatchResult, ClientRecord, ModelRecord,
-                               RoundRecord, RunResult, StrategyOutput)
+from repro.api.results import (BatchResult, ClientRecord, CohortRecord,
+                               FleetResult, ModelRecord, RoundRecord,
+                               RunResult, StrategyOutput)
 from repro.api.strategies import (StrategySpec, describe_strategies,
                                   get_plan, get_strategy, get_strategy_spec,
                                   list_strategies, register_plan,
@@ -45,8 +51,10 @@ from repro.api.trainer import (LocalTrainer, make_plain_step,
                                vmap_step)
 
 __all__ = [
+    "launch",
     "run", "Experiment", "Callbacks",
     "run_batch", "BatchAxes", "BatchResult",
+    "FleetResult", "CohortRecord",
     "RunResult", "ClientRecord", "ModelRecord", "RoundRecord",
     "StrategyOutput", "stack_trees", "unstack_tree",
     "StrategyPlan", "Topology", "LocalBlock", "interpret",

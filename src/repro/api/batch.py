@@ -43,11 +43,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 
-from repro.api.engine import (Experiment, finalize_result, run,
+from repro.api.engine import (Experiment, _run, finalize_result,
                               warn_unsupported_fields)
 from repro.api.plan import interpret_batched
 from repro.api.results import BatchResult, RunResult
@@ -173,17 +174,22 @@ def _batchable(e: Experiment) -> bool:
 # run_batch
 # ---------------------------------------------------------------------------
 
-def run_batch(experiment: Optional[Experiment] = None,
-              axes: Optional[BatchAxes] = None, *,
-              experiments: Optional[Sequence[Experiment]] = None,
-              mesh=None) -> BatchResult:
+def _run_batch(experiment: Optional[Experiment] = None,
+               axes: Optional[BatchAxes] = None, *,
+               experiments: Optional[Sequence[Experiment]] = None,
+               mesh=None) -> BatchResult:
     """Execute a sweep of experiments, batching compatible runs into single
     jitted programs. Either pass a base `experiment` plus `axes` (expanded
     via `BatchAxes.expand`), or an explicit `experiments` list (runs that
     need per-run data/eval beyond what BatchAxes factories express).
+    (Implementation behind `repro.api.launch`; the public `run_batch` is
+    its deprecated alias.)
 
     `mesh`: optional `jax.sharding.Mesh` — stacked run axes are sharded
-    over its data axis (see `repro.sharding.specs.run_batch_specs`).
+    over its data axis (see `repro.sharding.specs.run_batch_specs`), and
+    flattened run×client axes of independent plans execute under
+    `shard_map` when the flat batch divides the mesh's data-axis device
+    count (see `repro.api.trainer.sharded_program`).
 
     Per-run results are bit-identical to sequential `api.run` on the same
     Experiment (tested in tests/test_batch.py): the batched steps are the
@@ -228,7 +234,21 @@ def run_batch(experiment: Optional[Experiment] = None,
             results[i] = finalize_result(e, out, per_run)
         n_groups += 1
     for i in sequential:
-        results[i] = run(exps[i])
+        results[i] = _run(exps[i])
         n_groups += 1
     return BatchResult(runs=results, wall_time_s=time.time() - t0,
                        n_compiled_groups=n_groups)
+
+
+def run_batch(experiment: Optional[Experiment] = None,
+              axes: Optional[BatchAxes] = None, *,
+              experiments: Optional[Sequence[Experiment]] = None,
+              mesh=None) -> BatchResult:
+    """Deprecated: use ``repro.api.launch(experiment, axes=...)`` or
+    ``launch(list_of_experiments)`` — one front door for single runs,
+    sweeps, scenarios and fleets. Bit-identical (launch dispatches
+    here)."""
+    warnings.warn(
+        "repro.api.run_batch is deprecated; use repro.api.launch(...)",
+        DeprecationWarning, stacklevel=2)
+    return _run_batch(experiment, axes, experiments=experiments, mesh=mesh)

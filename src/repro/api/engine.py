@@ -113,10 +113,11 @@ def finalize_result(experiment: Experiment, out, wall_time_s: float,
         final_pool=out.final_pool)
 
 
-def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
+def _run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
     """Execute an Experiment through the strategy registry and return a
     typed RunResult. Accepts either an Experiment or its fields as
-    keyword arguments."""
+    keyword arguments. (Implementation behind `repro.api.launch`; the
+    public `run` is its deprecated alias.)"""
     if experiment is None:
         experiment = Experiment(**kwargs)
     elif kwargs:
@@ -128,3 +129,13 @@ def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
     # to the registered plan (register_plan); opaque callables run as-is.
     out = spec.fn(experiment)
     return finalize_result(experiment, out, time.time() - t0)
+
+
+def run(experiment: Optional[Experiment] = None, **kwargs) -> RunResult:
+    """Deprecated: use ``repro.api.launch(experiment)`` — one front door
+    for single runs, sweeps, scenarios and fleets. Bit-identical to it on
+    the same Experiment (launch dispatches here)."""
+    warnings.warn(
+        "repro.api.run is deprecated; use repro.api.launch(experiment)",
+        DeprecationWarning, stacklevel=2)
+    return _run(experiment, **kwargs)

@@ -1,0 +1,98 @@
+"""`repro.api.launch` — the one front door for federated execution.
+
+The engine grew four entry points as it grew capabilities (`run`,
+`run_batch`, `scenarios.run_scenario`, and now fleets); `launch`
+collapses them behind one call that dispatches on what it is given and
+always returns a typed result:
+
+    launch(experiment)                       -> RunResult
+    launch(experiment, axes=BatchAxes(...))  -> BatchResult
+    launch([exp0, exp1, ...])                -> BatchResult
+    launch(scenario_spec, model, fed=fed)    -> BatchResult
+    launch(fleet_spec, model, fed=fed)       -> FleetResult
+    launch("dir_label_skew", model, fed=fed) -> BatchResult  (registry)
+    launch("fleet_100k", model, fed=fed)     -> FleetResult  (registry)
+
+The old entry points survive as thin deprecated wrappers over the same
+implementations, so every `launch` dispatch is bit-identical to the call
+it replaces (pinned in tests/test_fleet.py).
+
+`mesh` (a `jax.sharding.Mesh`) applies to every batched dispatch: run
+axes shard per `run_batch_specs`, and flattened run×client axes of
+independent plans execute under `shard_map` when divisible
+(DESIGN.md §11).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+from repro.api.batch import BatchAxes, _run_batch
+from repro.api.engine import Experiment, _run
+from repro.api.results import BatchResult, FleetResult, RunResult
+
+Result = Any   # RunResult | BatchResult | FleetResult
+
+
+def _resolve_name(name: str):
+    """A registered fleet or scenario name → its spec (fleets first:
+    the namespaces are disjoint by construction of the catalogs)."""
+    from repro.scenarios.registry import FLEETS, SCENARIOS
+    for registry in (FLEETS, SCENARIOS):
+        try:
+            return registry.get(name)
+        except (KeyError, ValueError):
+            continue
+    raise ValueError(
+        f"launch: {name!r} names neither a registered fleet nor a "
+        "registered scenario (see repro.scenarios.list_fleets() / "
+        "list_scenarios())")
+
+
+def launch(target, model=None, *, axes: Optional[BatchAxes] = None,
+           mesh=None, fed=None, **kw) -> Result:
+    """Execute `target`, whatever it is (see the module docstring).
+
+    target     — Experiment | Sequence[Experiment] | ScenarioSpec |
+                 FleetSpec | registered scenario/fleet name
+    model      — required for ScenarioSpec / FleetSpec targets (specs
+                 describe data + strategy, not the model)
+    axes       — Experiment targets only: expand into a sweep
+    mesh       — shard batched/fleet execution over its data axes
+    fed        — required for ScenarioSpec / FleetSpec targets
+    **kw       — forwarded to the dispatched implementation (e.g.
+                 `strategies=`/`seeds=` for scenarios, `checkpoint_dir=`/
+                 `eval_every=` for fleets, Experiment field overrides for
+                 single runs)
+    """
+    # Lazy scenario imports: repro.scenarios imports repro.api, so the
+    # facade must not import it at module scope.
+    from repro.scenarios.compile import _run_scenario, run_fleet
+    from repro.scenarios.spec import FleetSpec, ScenarioSpec
+
+    if isinstance(target, str):
+        target = _resolve_name(target)
+
+    if isinstance(target, Experiment):
+        if axes is not None:
+            return _run_batch(target, axes, mesh=mesh, **kw)
+        if mesh is not None:
+            return _run_batch(target, mesh=mesh, **kw)
+        return _run(target, **kw)
+    if isinstance(target, FleetSpec):
+        if model is None or fed is None:
+            raise ValueError("launch(FleetSpec) needs model= and fed=")
+        return run_fleet(target, model, fed=fed, mesh=mesh, **kw)
+    if isinstance(target, ScenarioSpec):
+        if model is None or fed is None:
+            raise ValueError("launch(ScenarioSpec) needs model= and fed=")
+        return _run_scenario(target, model, fed=fed, mesh=mesh, **kw)
+    if isinstance(target, Sequence):
+        exps = list(target)
+        if not all(isinstance(e, Experiment) for e in exps):
+            raise TypeError(
+                "launch: a sequence target must contain only Experiments")
+        return _run_batch(experiments=exps, mesh=mesh, **kw)
+    raise TypeError(
+        f"launch: cannot dispatch on {type(target).__name__}; expected an "
+        "Experiment, a sequence of Experiments, a ScenarioSpec, a "
+        "FleetSpec, or a registered scenario/fleet name")

@@ -358,7 +358,10 @@ def _interpret_independent(exp, plan: StrategyPlan,
         keys = jax.random.split(exp.resolved_key(), len(exp.client_iters))
         inits = [exp.model.init(keys[c]) for c in sel]
     else:
-        m0 = exp.model.init(exp.resolved_key())
+        # shared_init honors Experiment.init_params (via _resolved_init)
+        # when the plan opts in — the fleet driver threads the global
+        # params through successive cohort rounds this way.
+        m0 = _resolved_init(exp, plan)
         inits = [m0 for _ in sel]
 
     block = plan.phases[0]
@@ -430,24 +433,30 @@ class _StackedArrays:
 
 
 def _batched_visit(trainer: LocalTrainer, m: PyTree, its, n_steps: int,
-                   stacks: _StackedArrays, step_fn=None) -> PyTree:
+                   stacks: _StackedArrays, step_fn=None,
+                   mesh=None) -> PyTree:
     """One batched plain/custom visit: all-DataPlan groups run the whole
     visit as one vmapped scan (stacked index tensors, no per-step host
-    stack_trees re-upload); anything else keeps the per-step loop."""
+    stack_trees re-upload); anything else keeps the per-step loop. With
+    `mesh`, the program goes under shard_map across the mesh data axes
+    (each device advances its slice of the flattened batch)."""
     if step_fn is None and all_want_scan(its):
         m, _ = trainer.train_scanned_batched(m, its, n_steps,
-                                             arrays=stacks.get(its))
+                                             arrays=stacks.get(its),
+                                             mesh=mesh)
     else:
-        m, _ = trainer.train_batched(m, its, n_steps, step_fn=step_fn)
+        m, _ = trainer.train_batched(m, its, n_steps, step_fn=step_fn,
+                                     mesh=mesh)
     return m
 
 
 def _batched_pool_visit(trainer: LocalTrainer, m: PyTree, its,
-                        alphas, betas, stacks: _StackedArrays):
+                        alphas, betas, stacks: _StackedArrays, mesh=None):
     if all_want_scan(its):
         return trainer.local_client_train_scanned_batched(
-            m, its, alphas, betas, arrays=stacks.get(its))
-    return trainer.local_client_train_batched(m, its, alphas, betas)
+            m, its, alphas, betas, arrays=stacks.get(its), mesh=mesh)
+    return trainer.local_client_train_batched(m, its, alphas, betas,
+                                              mesh=mesh)
 
 
 def _interpret_sequenced_batched(exps, plan: StrategyPlan,
@@ -507,7 +516,11 @@ def _interpret_independent_batched(exps, plan: StrategyPlan,
                                    mesh) -> List[StrategyOutput]:
     """Clients within a run are independent, so the run and client axes
     flatten into one (B·N,) vmap axis — within-round client-parallel
-    training on top of the cross-run batching."""
+    training on top of the cross-run batching. This flattened axis is the
+    one the mesh shards: with a mesh whose data-axis device count divides
+    B·N, every visit below runs under shard_map (one compiled program,
+    each device advancing its slice of runs×clients); otherwise the
+    single-program vmap path is chosen — both bit-identical."""
     fed = exps[0].fed
     sel = _selected_clients(exps[0], plan)   # group key fixes the selection
     n_sel = len(sel)
@@ -517,14 +530,14 @@ def _interpret_independent_batched(exps, plan: StrategyPlan,
             keys = jax.random.split(e.resolved_key(), len(e.client_iters))
             inits.extend(e.model.init(keys[c]) for c in sel)
     else:
-        m0s = [e.model.init(e.resolved_key()) for e in exps]
+        m0s = [_resolved_init(e, plan) for e in exps]
         inits = [m0 for m0 in m0s for _ in sel]
     flat = _shard(stack_trees(inits), mesh)
     flat_iters = [e.client_iters[c] for e in exps for c in sel]
     stacks = _StackedArrays(flat_iters)
     if plan.warmup == "per_client":
         flat = _batched_visit(trainer, flat, flat_iters, fed.e_warmup,
-                              stacks)
+                              stacks, mesh=mesh)
 
     block = plan.phases[0]
     recs: List[List[Any]] = [[] for _ in flat_iters]
@@ -532,12 +545,13 @@ def _interpret_independent_batched(exps, plan: StrategyPlan,
     if block.kind == "pool":
         alphas, betas = _alphas_betas(exps, repeat=n_sel)
         flat, pools, recs = _batched_pool_visit(trainer, flat, flat_iters,
-                                                alphas, betas, stacks)
+                                                alphas, betas, stacks,
+                                                mesh=mesh)
     else:
         step_fn = (block.batched_step_factory(trainer, exps, None)
                    if block.kind == "custom" else None)
         flat = _batched_visit(trainer, flat, flat_iters, block.n_steps(fed),
-                              stacks, step_fn=step_fn)
+                              stacks, step_fn=step_fn, mesh=mesh)
 
     outs: List[StrategyOutput] = []
     for i, e in enumerate(exps):

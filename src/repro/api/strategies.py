@@ -211,10 +211,15 @@ register_plan("fedseq", StrategyPlan(
     init_from_experiment=True, records="clients",
     supports=("init_params", "order")))
 
+# Both decentralized baselines honor Experiment.init_params: the shared
+# broadcast init falls back to model.init when it is None (existing
+# behavior), and the fleet driver threads the global params through
+# successive cohort rounds with it.
 register_plan("dfedavgm", StrategyPlan(
     topology=Topology("independent"),
     phases=(LocalBlock("plain"),),
     aggregate="tree_mean", broadcast="shared_init",
+    init_from_experiment=True, supports=("init_params",),
     trainer_overrides=lambda fed: {"optimizer": "momentum",
                                    "learning_rate": fed.learning_rate * 10}))
 
@@ -224,6 +229,7 @@ register_plan("dfedsam", StrategyPlan(
                        batched_step_factory=_sam_step_batched,
                        label="sam"),),
     aggregate="tree_mean", broadcast="shared_init",
+    init_from_experiment=True, supports=("init_params",),
     trainer_overrides=lambda fed: {"optimizer": "sgd",
                                    "learning_rate": fed.learning_rate * 10}))
 

@@ -26,6 +26,7 @@ from repro.data.plan import (DataPlan, stack_plan_arrays,
                              stack_plan_indices)
 from repro.optim import make_optimizer
 from repro.optim.optimizers import Optimizer
+from repro.sharding.specs import can_shard_flat, shard_map_flat
 
 PyTree = Any
 
@@ -113,26 +114,30 @@ def vmap_step(one_step: Callable, n_stacked_extras: int = 0):
     return jax.jit(jax.vmap(one_step, in_axes=axes), donate_argnums=(0, 1))
 
 
-def make_batched_plain_step(loss_fn: Callable, opt: Optimizer):
-    """Vmapped variant of ``make_plain_step``: every argument except the
-    step counter carries a leading run axis, so B independent runs advance
-    in one dispatch. Per-slice math is the unbatched step's graph under
-    ``vmap`` — the bit-identity contract `run_batch` tests rely on."""
+def _vmapped_plain_step(loss_fn: Callable, opt: Optimizer):
+    """Unjitted vmapped plain step — every argument except the step counter
+    carries a leading run axis. The building block `make_batched_plain_step`
+    jits and the shard-mapped fleet path wraps per device slice."""
 
     def one_step(params, opt_state, batch, step):
         task, grads = jax.value_and_grad(loss_fn)(params, batch)
         params, opt_state = opt.update(params, grads, opt_state, step)
         return params, opt_state, task
 
-    return jax.jit(jax.vmap(one_step, in_axes=(0, 0, 0, None)),
-                   donate_argnums=(0, 1))
+    return jax.vmap(one_step, in_axes=(0, 0, 0, None))
 
 
-def make_batched_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
-                           backend: PoolBackend):
-    """Vmapped regularized step: stacked params/opt-state/batches/pools plus
-    per-run (α, β) vectors — a whole seed sweep or (α, β) grid is one jitted
-    program instead of |sweep| sequential dispatches."""
+def make_batched_plain_step(loss_fn: Callable, opt: Optimizer):
+    """Vmapped variant of ``make_plain_step``: every argument except the
+    step counter carries a leading run axis, so B independent runs advance
+    in one dispatch. Per-slice math is the unbatched step's graph under
+    ``vmap`` — the bit-identity contract `run_batch` tests rely on."""
+    return jax.jit(_vmapped_plain_step(loss_fn, opt), donate_argnums=(0, 1))
+
+
+def _vmapped_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
+                       backend: PoolBackend):
+    """Unjitted vmapped regularized step (see `_vmapped_plain_step`)."""
     full_loss = hp_regularized_loss(loss_fn, fed, backend)
 
     def one_step(params, opt_state, batch, pool, alpha, beta, step):
@@ -142,7 +147,15 @@ def make_batched_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
         params, opt_state = opt.update(params, grads, opt_state, step)
         return params, opt_state, task
 
-    return jax.jit(jax.vmap(one_step, in_axes=(0, 0, 0, 0, 0, 0, None)),
+    return jax.vmap(one_step, in_axes=(0, 0, 0, 0, 0, 0, None))
+
+
+def make_batched_pool_step(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
+                           backend: PoolBackend):
+    """Vmapped regularized step: stacked params/opt-state/batches/pools plus
+    per-run (α, β) vectors — a whole seed sweep or (α, β) grid is one jitted
+    program instead of |sweep| sequential dispatches."""
+    return jax.jit(_vmapped_pool_step(loss_fn, fed, opt, backend),
                    donate_argnums=(0, 1))
 
 
@@ -228,6 +241,14 @@ class _CompiledSteps(NamedTuple):
     scanned_local: Callable
     batched_scanned_plain: Callable
     batched_scanned_local: Callable
+    # unjitted vmapped cores — what `sharded_program` puts under shard_map
+    # when a mesh is passed to the batched entry points. Stored here (not
+    # rebuilt per call) so the sharded-program cache keys stay stable and
+    # each (core, mesh) pair compiles exactly once per process.
+    vm_plain_step: Callable
+    vm_pool_step: Callable
+    vm_scanned_plain: Callable
+    vm_scanned_local: Callable
 
 
 class StepKey(NamedTuple):
@@ -260,19 +281,24 @@ def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
         opt = make_optimizer(opt_name, lr, wd)
         plain_core = _scanned_train_core(loss_fn, opt)
         local_core = _scanned_local_core(loss_fn, fed, opt, backend)
+        vm_plain = _vmapped_plain_step(loss_fn, opt)
+        vm_pool = _vmapped_pool_step(loss_fn, fed, opt, backend)
         return _CompiledSteps(
             opt=opt,
             pool_step=make_pool_step(loss_fn, fed, opt, backend),
             plain_step=make_plain_step(loss_fn, opt),
-            batched_pool_step=make_batched_pool_step(loss_fn, fed, opt,
-                                                     backend),
-            batched_plain_step=make_batched_plain_step(loss_fn, opt),
+            batched_pool_step=jax.jit(vm_pool, donate_argnums=(0, 1)),
+            batched_plain_step=jax.jit(vm_plain, donate_argnums=(0, 1)),
             scanned_plain=jax.jit(plain_core),
             scanned_local=jax.jit(local_core),
             batched_scanned_plain=jax.jit(
                 jax.vmap(plain_core, in_axes=(0, 0, 0))),
             batched_scanned_local=jax.jit(
-                jax.vmap(local_core, in_axes=(0, 0, 0, 0, 0))))
+                jax.vmap(local_core, in_axes=(0, 0, 0, 0, 0))),
+            vm_plain_step=vm_plain,
+            vm_pool_step=vm_pool,
+            vm_scanned_plain=jax.vmap(plain_core, in_axes=(0, 0, 0)),
+            vm_scanned_local=jax.vmap(local_core, in_axes=(0, 0, 0, 0, 0)))
 
     key = StepKey(loss_fn, fed, opt_name, lr, wd, backend.name)
     try:
@@ -287,6 +313,35 @@ def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
     else:
         _STEP_CACHE.move_to_end(key)
     return cached
+
+
+# (vm_fn, mesh, leading, donate) → jit(shard_map(vm_fn)), bounded LRU.
+# Sharded programs are built on demand the first time a batched entry point
+# sees a given (core, mesh) pair — a fleet sweep reuses one compiled
+# program across every cohort/round instead of re-wrapping per call.
+_SHARDED_CACHE: "OrderedDict[tuple, Callable]" = OrderedDict()
+_SHARDED_CACHE_MAX = 16
+
+
+def sharded_program(vm_fn: Callable, mesh, leading: Tuple[bool, ...],
+                    donate: Tuple[int, ...] = ()) -> Callable:
+    """`jax.jit(shard_map_flat(vm_fn, mesh, leading))`, cached process-wide.
+    `vm_fn` must be a *stable* callable (one of the `_CompiledSteps.vm_*`
+    cores, or a per-call custom step) whose flagged arguments carry the
+    flattened run×client leading axis. Each device runs the vmapped core on
+    its slice — per-run math never crosses the axis, so results are
+    bit-identical to the single-program vmap path."""
+    key = (vm_fn, mesh, tuple(leading), tuple(donate))
+    fn = _SHARDED_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map_flat(vm_fn, mesh, leading),
+                     donate_argnums=tuple(donate))
+        _SHARDED_CACHE[key] = fn
+        while len(_SHARDED_CACHE) > _SHARDED_CACHE_MAX:
+            _SHARDED_CACHE.popitem(last=False)
+    else:
+        _SHARDED_CACHE.move_to_end(key)
+    return fn
 
 
 # Jitted batched pool operations, shared process-wide: an *eager* vmap here
@@ -328,6 +383,10 @@ class LocalTrainer:
         self.scanned_local = compiled.scanned_local
         self.batched_scanned_plain = compiled.batched_scanned_plain
         self.batched_scanned_local = compiled.batched_scanned_local
+        self.vm_plain_step = compiled.vm_plain_step
+        self.vm_pool_step = compiled.vm_pool_step
+        self.vm_scanned_plain = compiled.vm_scanned_plain
+        self.vm_scanned_local = compiled.vm_scanned_local
         self._batched_opt_init = jax.jit(jax.vmap(self.opt.init))
         self._batched_pool_create = jax.jit(
             jax.vmap(lambda m: self.backend.create(m, self.fed)))
@@ -436,29 +495,44 @@ class LocalTrainer:
                       alphas: Optional[jax.Array] = None,
                       betas: Optional[jax.Array] = None,
                       step_fn: Optional[Callable] = None,
+                      mesh: Any = None,
                       ) -> Tuple[PyTree, jax.Array]:
         """`train` over a stacked (B, …) params pytree and B data iterators:
         each step stacks one batch per run and advances all runs in a single
-        vmapped dispatch. Returns (stacked params, (B,) last task losses)."""
+        vmapped dispatch. With `mesh` (and B divisible by its data-axis
+        device count) the dispatch goes under `shard_map` — each device
+        advances its slice of the batch, bit-identically to the single-device
+        path. Returns (stacked params, (B,) last task losses)."""
+        shard = can_shard_flat(mesh, len(data_iters))
+        if step_fn is not None:
+            step = (sharded_program(step_fn, mesh,
+                                    (True, True, True, False), (0, 1))
+                    if shard else step_fn)
+        elif pools is None:
+            step = (sharded_program(self.vm_plain_step, mesh,
+                                    (True, True, True, False), (0, 1))
+                    if shard else self.batched_plain_step)
+        else:
+            step = (sharded_program(self.vm_pool_step, mesh,
+                                    (True,) * 6 + (False,), (0, 1))
+                    if shard else self.batched_pool_step)
         params = jax.tree.map(jnp.copy, params)   # steps donate buffers
         opt_state = self._batched_opt_init(params)
         task = jnp.zeros((len(data_iters),))
         for s in range(n_steps):
             batch = stack_trees([next(it) for it in data_iters])
-            if step_fn is not None:
-                params, opt_state, task = step_fn(params, opt_state, batch,
-                                                  jnp.int32(s))
-            elif pools is None:
-                params, opt_state, task = self.batched_plain_step(
+            if step_fn is not None or pools is None:
+                params, opt_state, task = step(
                     params, opt_state, batch, jnp.int32(s))
             else:
-                params, opt_state, task = self.batched_pool_step(
+                params, opt_state, task = step(
                     params, opt_state, batch, pools, alphas, betas,
                     jnp.int32(s))
         return params, task
 
     def local_client_train_batched(self, m_in: PyTree, data_iters: List[Any],
-                                   alphas: jax.Array, betas: jax.Array,
+                                   alphas: jax.Array, betas: jax.Array, *,
+                                   mesh: Any = None,
                                    ) -> Tuple[PyTree, Any,
                                               List[List[ModelRecord]]]:
         """`local_client_train` over B runs at once: B pools seeded from the
@@ -469,7 +543,8 @@ class LocalTrainer:
         fed = self.fed
         b = len(data_iters)
         if not fed.use_pool:
-            params, task = self.train_batched(m_in, data_iters, fed.e_local)
+            params, task = self.train_batched(m_in, data_iters, fed.e_local,
+                                              mesh=mesh)
             return params, None, [[] for _ in range(b)]
 
         pools = self._batched_pool_create(m_in)
@@ -478,7 +553,7 @@ class LocalTrainer:
             m_j = _batched_pool_average(pools)
             m_j, task = self.train_batched(m_j, data_iters, fed.e_local,
                                            pools=pools, alphas=alphas,
-                                           betas=betas)
+                                           betas=betas, mesh=mesh)
             pools = _batched_pool_append(pools, m_j)
             tasks.append(task)
         # one deferred sync for the whole (S, B) loss grid — per-element
@@ -490,37 +565,46 @@ class LocalTrainer:
 
     def train_scanned_batched(self, params: PyTree, plans: List[DataPlan],
                               n_steps: int, *, arrays: Any = None,
+                              mesh: Any = None,
                               ) -> Tuple[PyTree, jax.Array]:
         """`train_scanned` over B runs: stacked index tensors drive one
         vmapped scan — the whole group's phase is a single dispatch, with
         no per-step host `stack_trees` re-upload. `arrays` lets the
-        caller reuse a stacked-arrays pytree across visits."""
+        caller reuse a stacked-arrays pytree across visits. With `mesh`,
+        the scan goes under `shard_map` (each device scans its slice)."""
         if arrays is None:
             arrays = stack_plan_arrays(plans)
         idx = stack_plan_indices(plans, n_steps)
-        return self.batched_scanned_plain(params, arrays, idx)
+        fn = (sharded_program(self.vm_scanned_plain, mesh, (True,) * 3)
+              if can_shard_flat(mesh, len(plans))
+              else self.batched_scanned_plain)
+        return fn(params, arrays, idx)
 
     def local_client_train_scanned_batched(self, m_in: PyTree,
                                            plans: List[DataPlan],
                                            alphas: jax.Array,
                                            betas: jax.Array, *,
                                            arrays: Any = None,
+                                           mesh: Any = None,
                                            ) -> Tuple[PyTree, Any,
                                                       List[List[ModelRecord]]]:
         """`local_client_train_scanned` over B runs in one vmapped scan
-        program (B × S × e_local steps, one dispatch)."""
+        program (B × S × e_local steps, one dispatch). With `mesh`, the
+        program goes under `shard_map` — each device runs the full local
+        procedure for its slice of the flattened run×client batch."""
         fed = self.fed
         b = len(plans)
         if not fed.use_pool:
             params, _ = self.train_scanned_batched(m_in, plans, fed.e_local,
-                                                   arrays=arrays)
+                                                   arrays=arrays, mesh=mesh)
             return params, None, [[] for _ in range(b)]
         if arrays is None:
             arrays = stack_plan_arrays(plans)
         idx = stack_plan_indices(plans, fed.pool_size * fed.e_local)
         idx = idx.reshape(b, fed.pool_size, fed.e_local, -1)
-        avg, pools, tasks = self.batched_scanned_local(
-            m_in, arrays, idx, alphas, betas)
+        fn = (sharded_program(self.vm_scanned_local, mesh, (True,) * 5)
+              if can_shard_flat(mesh, b) else self.batched_scanned_local)
+        avg, pools, tasks = fn(m_in, arrays, idx, alphas, betas)
         return avg, pools, _model_records(tasks.T, b)
 
 

@@ -1,4 +1,7 @@
-from repro.checkpoint.checkpoint import (load_pool, load_pytree, save_pool,
+from repro.checkpoint.checkpoint import (fleet_round_path, latest_fleet_round,
+                                         load_pool, load_pytree,
+                                         save_fleet_round, save_pool,
                                          save_pytree)
 
-__all__ = ["save_pytree", "load_pytree", "save_pool", "load_pool"]
+__all__ = ["save_pytree", "load_pytree", "save_pool", "load_pool",
+           "save_fleet_round", "latest_fleet_round", "fleet_round_path"]

@@ -7,9 +7,11 @@ launcher's --handoff-dir exercises this one).
 """
 from __future__ import annotations
 
+import glob
 import io
 import os
-from typing import Any
+import re
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -47,6 +49,43 @@ def load_pytree(path: str, like: Any) -> Any:
     with np.load(path) as data:
         flat = dict(data)
     return _unflatten_like(flat, like)
+
+
+# -- fleet round checkpoints (the elastic-resume protocol) -------------------
+#
+# A fleet sweep writes the post-aggregate global params after each cohort
+# round; a preempted sweep restarts from the newest round file. Because
+# every fleet quantity (cohort draw, client shards, round keys) is a pure
+# function of (FleetSpec, round) and the npz round-trip is bit-exact for
+# the stored dtypes, the resumed run's remaining rounds are bit-identical
+# to the uninterrupted run's (pinned in tests/test_fleet.py).
+
+_ROUND_RE = re.compile(r"round_(\d+)\.npz$")
+
+
+def fleet_round_path(ckpt_dir: str, r: int) -> str:
+    return os.path.join(ckpt_dir, f"round_{r:05d}.npz")
+
+
+def save_fleet_round(ckpt_dir: str, r: int, params: Any) -> None:
+    """Write round r's post-aggregate global params."""
+    save_pytree(fleet_round_path(ckpt_dir, r), params)
+
+
+def latest_fleet_round(ckpt_dir: str,
+                       like: Any) -> Tuple[Optional[int], Any]:
+    """(newest checkpointed round, its params) — or (None, None) when the
+    directory holds no round files (fresh start). `like` gives the params
+    structure (e.g. `model.init(key)`)."""
+    rounds = []
+    for path in glob.glob(os.path.join(ckpt_dir, "round_*.npz")):
+        m = _ROUND_RE.search(path)
+        if m:
+            rounds.append((int(m.group(1)), path))
+    if not rounds:
+        return None, None
+    r, path = max(rounds)
+    return r, load_pytree(path, like)
 
 
 # -- trained-pool round-trip (the serving handoff) ---------------------------

@@ -5,6 +5,7 @@ from repro.data.partition import (dirichlet_partition, domain_shift_partition,
                                   shard_partition, train_val_split)
 from repro.data.synthetic import (SyntheticImageDataset, SyntheticTextDataset,
                                   apply_domain, make_domain_datasets,
+                                  make_fleet_client_dataset,
                                   make_image_dataset, make_lm_dataset)
 from repro.data.pipeline import batch_iterator
 from repro.data.plan import (DataPlan, all_want_scan, stack_plan_arrays,
@@ -16,5 +17,6 @@ __all__ = ["dirichlet_partition", "domain_shift_partition",
            "severity_ladder", "train_val_split", "apply_domain",
            "SyntheticImageDataset", "SyntheticTextDataset",
            "make_image_dataset", "make_domain_datasets", "make_lm_dataset",
+           "make_fleet_client_dataset",
            "batch_iterator", "DataPlan", "all_want_scan",
            "stack_plan_arrays", "stack_plan_indices", "wants_scan"]

@@ -55,6 +55,28 @@ def make_image_dataset(n_samples=20000, n_classes=10, side=32, noise=1.0,
     return SyntheticImageDataset(images.astype(np.float32), labels, n_classes)
 
 
+def make_fleet_client_dataset(client_id: int, n_samples=64, n_classes=10,
+                              side=32, noise=2.5, label_beta=0.3, seed=0,
+                              means_seed=0) -> SyntheticImageDataset:
+    """One registered fleet client's local shard, a pure function of
+    (client_id, seed): the client's label marginal is its own
+    Dirichlet(label_beta) draw (per-client label skew — every client in a
+    10⁵–10⁶ fleet has a distinct skew), and its samples are class means +
+    noise under that marginal. Because identity fully determines the
+    shard, a fleet never materializes globally — only the current
+    cohort's shards exist, O(cohort) memory, and a resumed sweep redraws
+    byte-identical data."""
+    means = _class_means(np.random.default_rng(means_seed), n_classes, side)
+    rng = np.random.default_rng((seed, 0xF1EE7, int(client_id)))
+    marginal = rng.dirichlet(np.full(n_classes, label_beta))
+    labels = rng.choice(n_classes, size=n_samples,
+                        p=marginal).astype(np.int32)
+    images = means[labels] + noise * rng.normal(
+        size=(n_samples, side, side, 3)).astype(np.float32)
+    return SyntheticImageDataset(images.astype(np.float32), labels,
+                                 n_classes)
+
+
 _DOMAIN_TRANSFORMS = ("photo", "art", "cartoon", "sketch")
 
 

@@ -37,6 +37,20 @@ def make_batch_mesh(n_runs: int = 0):
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_cohort_mesh(flat: int = 0):
+    """Mesh for fleet/flattened-client execution (`launch(FleetSpec,
+    mesh=...)`): every local device on the data axis, clipped to the
+    largest count dividing the flattened run×client axis — `shard_map`
+    requires exact divisibility (sharding/specs.can_shard_flat falls
+    back to the single-program vmap path otherwise, so the clip keeps
+    every device useful instead of idling the whole mesh)."""
+    n = len(jax.devices())
+    if flat:
+        while n > 1 and flat % n:
+            n -= 1
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
 # TPU v5e roofline constants (per chip) — used by repro.analysis.roofline
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

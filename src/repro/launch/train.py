@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Experiment, list_strategies, run
+from repro.api import Experiment, launch, list_strategies
 from repro.checkpoint import load_pytree, save_pytree
 from repro.configs import FedConfig, get_arch
 from repro.data import (DataPlan, dirichlet_partition, make_domain_datasets,
@@ -127,9 +127,10 @@ def main():
     if method == "fedelmy" and args.shots > 1:
         method = "fedelmy_fewshot"
     track_eval = eval_fn if method.startswith("fedelmy") else None
-    res = run(Experiment(model=model, client_iters=iters, fed=fed,
-                         strategy=method, key=jax.random.PRNGKey(args.seed),
-                         eval_fn=track_eval, shots=args.shots))
+    res = launch(Experiment(model=model, client_iters=iters, fed=fed,
+                            strategy=method,
+                            key=jax.random.PRNGKey(args.seed),
+                            eval_fn=track_eval, shots=args.shots))
     m, hist = res.params, res.history()
     score = (res.final_metric if res.final_metric is not None
              else float(eval_fn(m)))

@@ -1,31 +1,43 @@
-"""`repro.scenarios` — declarative non-IID scenarios (DESIGN.md §7).
+"""`repro.scenarios` — declarative non-IID scenarios and fleets
+(DESIGN.md §7, §11).
 
 A `ScenarioSpec` describes one heterogeneity setup as data (family,
 partitioner + params, client population, dropout/straggler schedule,
-eval-split policy); the registry mirrors the strategy registry; and
-`build_experiments` compiles a spec into `run_batch`-ready Experiments —
-one compiled group per strategy.
+eval-split policy); a `FleetSpec` describes a population-scale
+federation (registered fleet of 10⁵–10⁶ clients, seeded participation
+trace, cohort per round). The registries mirror the strategy registry,
+and `repro.api.launch` is the front door for both:
 
-    from repro.scenarios import get_scenario, run_scenario
+    from repro.api import launch
+    from repro.scenarios import get_scenario, get_fleet
 
-    spec = get_scenario("quantity_skew").replace(n_samples=1500)
-    batch = run_scenario(spec, model, fed=fed,
-                         strategies=("fedelmy", "fedseq"), seeds=(0, 1))
+    batch = launch(get_scenario("quantity_skew"), model, fed=fed,
+                   strategies=("fedelmy", "fedseq"), seeds=(0, 1))
+    fleet = launch(get_fleet("fleet_100k"), model, fed=fed,
+                   checkpoint_dir="ckpt/fleet")
 """
-from repro.scenarios.compile import (ScenarioData, accuracy_eval,
-                                     build_experiments, materialize,
+from repro.scenarios.compile import (CohortData, ScenarioData,
+                                     accuracy_eval, build_experiments,
+                                     fleet_eval, materialize,
+                                     materialize_cohort, run_fleet,
                                      run_scenario)
-from repro.scenarios.registry import (PARTITIONERS, SCENARIOS,
-                                      PartitionerSpec, get_partitioner,
-                                      get_scenario, list_partitioners,
-                                      list_scenarios, register_partitioner,
+from repro.scenarios.registry import (FLEETS, PARTITIONERS, SCENARIOS,
+                                      PartitionerSpec, get_fleet,
+                                      get_partitioner, get_scenario,
+                                      list_fleets, list_partitioners,
+                                      list_scenarios, register_fleet,
+                                      register_partitioner,
                                       register_scenario)
-from repro.scenarios.spec import EVAL_SPLITS, FAMILIES, ScenarioSpec
+from repro.scenarios.spec import (EVAL_SPLITS, FAMILIES, PARTICIPATIONS,
+                                  FleetSpec, ScenarioSpec)
 
 __all__ = [
     "ScenarioSpec", "ScenarioData", "FAMILIES", "EVAL_SPLITS",
+    "FleetSpec", "CohortData", "PARTICIPATIONS",
     "register_scenario", "get_scenario", "list_scenarios", "SCENARIOS",
+    "register_fleet", "get_fleet", "list_fleets", "FLEETS",
     "register_partitioner", "get_partitioner", "list_partitioners",
     "PARTITIONERS", "PartitionerSpec",
     "materialize", "build_experiments", "run_scenario", "accuracy_eval",
+    "materialize_cohort", "run_fleet", "fleet_eval",
 ]

@@ -9,51 +9,66 @@
 `materialize(spec, seed)` draws the synthetic dataset, runs the
 registered partitioner, applies the population knobs (participation,
 dropout, stragglers), and resolves the eval-split policy. It returns
-plain numpy client arrays; `ScenarioData.iterators()` mints *fresh*
-stateful `DataPlan` streams per call — the client shards are uploaded
-to device ONCE per materialization and shared by every plan, while the
-per-plan shuffle cursor is what lets one materialized scenario feed
-many experiments without tripping `run_batch`'s shared-iterator
-rejection. Experiments carrying DataPlans execute their local phases
-through the scan-compiled path (DESIGN.md §9); `batch_iterators()`
-keeps the legacy host-streaming form (same seeds, bit-identical batch
-sequences).
+plain numpy client arrays; `ScenarioData.streams()` mints *fresh*
+stateful per-client streams per call — the client shards are uploaded
+to device ONCE per materialization and shared by every `DataPlan`,
+while the per-plan shuffle cursor is what lets one materialized
+scenario feed many experiments without tripping `run_batch`'s
+shared-iterator rejection. `streams()` is the one stream contract
+(`device=`/`scan=` route DataPlan vs legacy host streaming vs per-step
+dispatch — all bit-identical batch sequences); the old
+`iterators()`/`batch_iterators()` pair is deprecated.
+
+Fleet-scale federations go through the same machinery per *cohort*: a
+`FleetSpec`'s participation trace draws a cohort of clients each round,
+`materialize_cohort` builds their shards (pure functions of client id —
+the fleet itself never materializes), and `run_fleet` executes each
+cohort as ONE compiled program via the batched plan interpreter,
+checkpointing per round so the sweep is preemptible (DESIGN.md §11).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.batch import run_batch
+from repro.api.batch import _run_batch
 from repro.api.engine import Experiment
+from repro.api.plan import interpret_batched
+from repro.api.results import CohortRecord, FleetResult
+from repro.api.strategies import get_strategy_spec
+from repro.checkpoint import latest_fleet_round, save_fleet_round
 from repro.configs.base import FedConfig
 from repro.data.partition import train_val_split
 from repro.data.pipeline import batch_iterator, image_batch
 from repro.data.plan import DataPlan
-from repro.data.synthetic import (SyntheticImageDataset, make_domain_datasets,
+from repro.data.synthetic import (SyntheticImageDataset,
+                                  make_domain_datasets,
+                                  make_fleet_client_dataset,
                                   make_image_dataset)
 from repro.scenarios.registry import get_partitioner
-from repro.scenarios.spec import ScenarioSpec
+from repro.scenarios.spec import FleetSpec, ScenarioSpec
 
 Arrays = Dict[str, np.ndarray]
 
 
-@dataclasses.dataclass
-class ScenarioData:
-    """One seed's materialization of a spec: per-active-client arrays plus
-    the evaluation set."""
-    spec: ScenarioSpec
+class _ClientStreams:
+    """The unified stream-minting surface shared by `ScenarioData` and
+    `CohortData`: one documented contract (`streams`), one device-upload
+    cache, one tiling rule. Subclasses provide `client_data`, `seed` and
+    `_batch_size`."""
+
+    client_data: List[Arrays]
     seed: int
-    client_ids: List[int]            # original client indices (post
-                                     # participation/dropout selection)
-    client_data: List[Arrays]        # {"images", "labels"} per client
-    client_val: List[Optional[Arrays]]   # val_frac carves (None if 0)
-    eval_data: Arrays
-    n_classes: int
+
+    @property
+    def _batch_size(self) -> int:
+        raise NotImplementedError
 
     def _tiled_client(self, i: int) -> Arrays:
         """Client `i`'s arrays, deterministically tiled up to one full
@@ -62,7 +77,7 @@ class ScenarioData:
         sweep's runs could not stack into one compiled group."""
         c = self.client_data[i]
         n = len(c["labels"])
-        bs = self.spec.batch_size
+        bs = self._batch_size
         if n < bs:
             idx = np.tile(np.arange(n), -(-bs // n))[:bs]
             c = {k: v[idx] for k, v in c.items()}
@@ -77,29 +92,62 @@ class ScenarioData:
                 for i in range(len(self.client_data))]
         return self._device_cache
 
-    def iterators(self, base_seed: Optional[int] = None,
-                  scan: bool = True) -> List[Any]:
-        """Fresh per-client `DataPlan` streams. Call once per experiment —
-        the shuffle cursor is stateful and must not be shared across runs
-        of a batch; the underlying device arrays ARE shared (uploaded
-        once). Batch sequences are bit-identical to `batch_iterators()`.
-        `scan=False` keeps the per-step dispatch path over the
-        device-resident arrays — required for conv models on XLA CPU,
-        whose in-scan convolutions lower to a far slower code path
-        (DESIGN.md §9)."""
-        base = self.seed if base_seed is None else base_seed
-        return [DataPlan(arr, self.spec.batch_size, seed=base * 100 + i,
-                         scan=scan)
-                for i, arr in enumerate(self._device_clients())]
+    def streams(self, base_seed: Optional[int] = None, *,
+                scan: bool = True, device: bool = True) -> List[Any]:
+        """Fresh per-client streams — THE stream contract. Call once per
+        experiment: every stream's cursor is stateful and must not be
+        shared across runs of a batch (`run_batch` rejects sharing); the
+        underlying device arrays ARE shared (uploaded once).
 
-    def batch_iterators(self, base_seed: Optional[int] = None) -> List[Any]:
-        """Legacy host-streaming form of `iterators()` (the per-step
-        dispatch path) — kept for fallback consumers and as the
-        bit-identity oracle in tests and the local_phase benchmark."""
+        device=True (default) mints device-resident `DataPlan`s;
+        `scan=True` routes the scan-compiled local phase (one program per
+        phase, DESIGN.md §9), `scan=False` keeps per-step dispatch over
+        the device arrays (conv models on XLA CPU). device=False returns
+        the legacy host-streaming `batch_iterator` form — the per-step
+        oracle. All three produce bit-identical batch sequences."""
         base = self.seed if base_seed is None else base_seed
-        return [batch_iterator(self._tiled_client(i), self.spec.batch_size,
+        if device:
+            return [DataPlan(arr, self._batch_size, seed=base * 100 + i,
+                             scan=scan)
+                    for i, arr in enumerate(self._device_clients())]
+        return [batch_iterator(self._tiled_client(i), self._batch_size,
                                seed=base * 100 + i)
                 for i in range(len(self.client_data))]
+
+    def iterators(self, base_seed: Optional[int] = None,
+                  scan: bool = True) -> List[Any]:
+        """Deprecated: use ``streams(scan=...)`` (same streams)."""
+        warnings.warn(
+            "ScenarioData.iterators() is deprecated; use "
+            "streams(scan=...) — the unified stream surface",
+            DeprecationWarning, stacklevel=2)
+        return self.streams(base_seed, scan=scan)
+
+    def batch_iterators(self, base_seed: Optional[int] = None) -> List[Any]:
+        """Deprecated: use ``streams(device=False)`` (same streams)."""
+        warnings.warn(
+            "ScenarioData.batch_iterators() is deprecated; use "
+            "streams(device=False) — the unified stream surface",
+            DeprecationWarning, stacklevel=2)
+        return self.streams(base_seed, device=False)
+
+
+@dataclasses.dataclass
+class ScenarioData(_ClientStreams):
+    """One seed's materialization of a spec: per-active-client arrays plus
+    the evaluation set."""
+    spec: ScenarioSpec
+    seed: int
+    client_ids: List[int]            # original client indices (post
+                                     # participation/dropout selection)
+    client_data: List[Arrays]        # {"images", "labels"} per client
+    client_val: List[Optional[Arrays]]   # val_frac carves (None if 0)
+    eval_data: Arrays
+    n_classes: int
+
+    @property
+    def _batch_size(self) -> int:
+        return self.spec.batch_size
 
     def eval_dataset(self) -> SyntheticImageDataset:
         return SyntheticImageDataset(self.eval_data["images"],
@@ -108,6 +156,22 @@ class ScenarioData:
 
     def sizes(self) -> List[int]:
         return [len(c["labels"]) for c in self.client_data]
+
+
+@dataclasses.dataclass
+class CohortData(_ClientStreams):
+    """One fleet round's materialized cohort: the participation trace's
+    client ids and their shards — pure functions of (FleetSpec, round),
+    so a resumed sweep redraws byte-identical cohorts."""
+    fleet: FleetSpec
+    round: int
+    seed: int                        # stream base seed (folded per round)
+    client_ids: List[int]            # registered fleet ids, |cohort_size|
+    client_data: List[Arrays]
+
+    @property
+    def _batch_size(self) -> int:
+        return self.fleet.batch_size
 
 
 def _index_family_clients(spec: ScenarioSpec, seed: int, fn: Callable):
@@ -234,7 +298,7 @@ def build_experiments(spec: ScenarioSpec, model, *,
     evals = {seed: build_eval(model, datas[seed]) for seed in seeds}
     opts = strategy_options or {}
     return [Experiment(model=model,
-                       client_iters=datas[seed].iterators(scan=scan),
+                       client_iters=datas[seed].streams(scan=scan),
                        fed=fed, strategy=strategy,
                        key=jax.random.PRNGKey(seed), eval_fn=evals[seed],
                        shots=shots,
@@ -242,10 +306,139 @@ def build_experiments(spec: ScenarioSpec, model, *,
             for strategy in strategies for seed in seeds]
 
 
+def _run_scenario(spec: ScenarioSpec, model, *, fed: FedConfig,
+                  strategies: Sequence[str] = ("fedelmy",),
+                  seeds: Sequence[int] = (0,), mesh=None, **kw):
+    """Compile and execute a scenario sweep through the batched engine.
+    (Implementation behind `repro.api.launch`; the public `run_scenario`
+    is its deprecated alias.)"""
+    exps = build_experiments(spec, model, fed=fed, strategies=strategies,
+                             seeds=seeds, **kw)
+    return _run_batch(experiments=exps, mesh=mesh)
+
+
 def run_scenario(spec: ScenarioSpec, model, *, fed: FedConfig,
                  strategies: Sequence[str] = ("fedelmy",),
                  seeds: Sequence[int] = (0,), mesh=None, **kw):
-    """Compile and execute a scenario sweep through `api.run_batch`."""
-    exps = build_experiments(spec, model, fed=fed, strategies=strategies,
-                             seeds=seeds, **kw)
-    return run_batch(experiments=exps, mesh=mesh)
+    """Deprecated: use ``repro.api.launch(spec, model, fed=fed, ...)`` —
+    one front door for single runs, sweeps, scenarios and fleets.
+    Bit-identical to it (launch dispatches here)."""
+    warnings.warn(
+        "repro.scenarios.run_scenario is deprecated; use "
+        "repro.api.launch(spec, model, fed=fed, ...)",
+        DeprecationWarning, stacklevel=2)
+    return _run_scenario(spec, model, fed=fed, strategies=strategies,
+                         seeds=seeds, mesh=mesh, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale execution: streaming cohorts (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def materialize_cohort(fleet: FleetSpec, r: int) -> CohortData:
+    """Materialize round r's cohort: draw the participation trace's ids
+    and build each participant's shard. Pure in (fleet, r) — the full
+    fleet never materializes; memory is O(cohort_size)."""
+    ids = fleet.cohort(r)
+    client_data = [image_batch(make_fleet_client_dataset(
+        int(c), n_samples=fleet.samples_per_client,
+        n_classes=fleet.n_classes, side=fleet.side, noise=fleet.noise,
+        label_beta=fleet.label_beta, seed=fleet.seed)) for c in ids]
+    return CohortData(fleet=fleet, round=r,
+                      seed=fleet.seed * 100003 + r * 131 + 7,
+                      client_ids=[int(c) for c in ids],
+                      client_data=client_data)
+
+
+def fleet_eval(model, fleet: FleetSpec) -> Callable:
+    """Global eval over a held-out test draw from the fleet's generative
+    process (balanced labels — the global distribution every client's
+    skewed marginal deviates from)."""
+    test = make_image_dataset(fleet.n_test, fleet.n_classes, fleet.side,
+                              fleet.noise, seed=fleet.seed + 91)
+    imgs, labels = jnp.asarray(test.images), jnp.asarray(test.labels)
+
+    @jax.jit
+    def acc(params):
+        logits = model.forward(params, {"images": imgs})
+        return jnp.mean(jnp.argmax(logits, -1) == labels)
+    return acc
+
+
+def _fleet_plan(fleet: FleetSpec):
+    """The fleet strategy's plan, validated for cohort-round semantics:
+    round r's aggregate must broadcast into round r+1 as the shared init,
+    so the plan must be independent-topology, shared_init, and honor
+    Experiment.init_params."""
+    plan = get_strategy_spec(fleet.strategy).plan
+    if plan is None or plan.topology.kind != "independent" \
+            or plan.broadcast != "shared_init" \
+            or not plan.init_from_experiment:
+        raise ValueError(
+            f"fleet strategy {fleet.strategy!r} must be a registered plan "
+            "with independent topology, shared_init broadcast, and "
+            "init_from_experiment=True (dfedavgm / dfedsam qualify): "
+            "cohort rounds thread the global aggregate through "
+            "Experiment.init_params")
+    return plan
+
+
+def run_fleet(fleet: FleetSpec, model, *, fed: FedConfig, mesh=None,
+              checkpoint_dir: Optional[str] = None,
+              eval_every: int = 0, scan: bool = True,
+              rounds: Optional[int] = None) -> FleetResult:
+    """Execute a fleet sweep: per round, draw the cohort, materialize its
+    shards, and run the whole cohort as ONE compiled program through the
+    batched plan interpreter (the flattened run×client axis — sharded
+    over `mesh`'s data axes when divisible). The round's aggregate
+    broadcasts into the next round via `Experiment.init_params`.
+
+    The cohort-shaped program compiles once (first round) and is reused
+    by every subsequent round: the step cache keys on the loss/config and
+    the cohort shapes are fixed by the spec.
+
+    `checkpoint_dir` makes the sweep preemptible: each round's aggregate
+    is written there, and a restarted call resumes after the newest
+    round file — bit-identical to the uninterrupted run (every fleet
+    quantity is a pure function of (spec, round)). `eval_every=k`
+    evaluates every k-th round (0: final round only); `rounds` overrides
+    `fleet.rounds` (e.g. to kill a sweep mid-way in tests)."""
+    t0 = time.time()
+    plan = _fleet_plan(fleet)
+    fed = dataclasses.replace(fed, n_clients=fleet.cohort_size)
+    n_rounds = fleet.rounds if rounds is None else rounds
+    acc = fleet_eval(model, fleet)
+
+    params = model.init(jax.random.PRNGKey(fleet.seed))
+    start, resumed_from = 0, None
+    if checkpoint_dir is not None:
+        r, saved = latest_fleet_round(checkpoint_dir, params)
+        if r is not None:
+            params, start, resumed_from = saved, r + 1, r
+
+    cohorts: List[CohortRecord] = []
+    for r in range(start, n_rounds):
+        cohort = materialize_cohort(fleet, r)
+        exp = Experiment(
+            model=model, client_iters=cohort.streams(scan=scan), fed=fed,
+            strategy=fleet.strategy,
+            key=jax.random.PRNGKey(fleet.seed * 100003 + r),
+            init_params=params)
+        g0 = time.time()
+        out = interpret_batched([exp], plan, mesh)[0]
+        params = out.params
+        wall = time.time() - g0
+        metric = None
+        if (eval_every and (r + 1) % eval_every == 0) or r == n_rounds - 1:
+            metric = float(acc(params))
+        cohorts.append(CohortRecord(round=r, clients=cohort.client_ids,
+                                    global_metric=metric, wall_time_s=wall))
+        if checkpoint_dir is not None:
+            save_fleet_round(checkpoint_dir, r, params)
+
+    final = (cohorts[-1].global_metric if cohorts
+             else float(acc(params)))
+    return FleetResult(fleet=fleet, strategy=fleet.strategy, params=params,
+                       fed=fed, cohorts=cohorts, final_metric=final,
+                       wall_time_s=time.time() - t0,
+                       resumed_from=resumed_from)

@@ -17,10 +17,11 @@ from typing import Callable, List, NamedTuple
 
 from repro.api.registry import Registry
 from repro.data import partition as P
-from repro.scenarios.spec import ScenarioSpec
+from repro.scenarios.spec import FleetSpec, ScenarioSpec
 
 SCENARIOS = Registry("scenario")
 PARTITIONERS = Registry("partitioner")
+FLEETS = Registry("fleet")
 
 PARTITIONER_KINDS = ("indices", "datasets")
 
@@ -58,6 +59,19 @@ def get_scenario(name: str) -> ScenarioSpec:
 
 def list_scenarios() -> List[str]:
     return SCENARIOS.names()
+
+
+def register_fleet(spec: FleetSpec) -> FleetSpec:
+    FLEETS.register(spec.name, spec)
+    return spec
+
+
+def get_fleet(name: str) -> FleetSpec:
+    return FLEETS.get(name)
+
+
+def list_fleets() -> List[str]:
+    return FLEETS.names()
 
 
 # ---------------------------------------------------------------------------
@@ -111,3 +125,24 @@ register_scenario(ScenarioSpec(
     name="stragglers", family="label_skew",
     partitioner="dirichlet", partitioner_params={"beta": 0.3},
     stragglers=(1, 3), straggler_keep=0.4))
+
+
+# ---------------------------------------------------------------------------
+# Built-in fleet catalog (DESIGN.md §11). The fleet never materializes —
+# fleet_size is the registered-client id space the participation trace
+# draws from; only each round's cohort exists in memory.
+# ---------------------------------------------------------------------------
+
+# The benchmark fleet: 10⁵ registered clients, uniform participation.
+register_fleet(FleetSpec(
+    name="fleet_100k", fleet_size=100_000, cohort_size=32, rounds=4))
+
+# Full-coverage variant: a deterministic cyclic walk over 10⁶ clients.
+register_fleet(FleetSpec(
+    name="fleet_1m_cyclic", fleet_size=1_000_000, cohort_size=64,
+    rounds=8, participation="cyclic"))
+
+# Tiny smoke fleet for tests and --fast CI.
+register_fleet(FleetSpec(
+    name="fleet_smoke", fleet_size=1_000, cohort_size=8, rounds=2,
+    samples_per_client=32))

@@ -12,14 +12,55 @@ Strategy (GSPMD, MaxText-style logical rules):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    """Total device count across the mesh data axes — the shard count a
+    leading run×client axis divides into under `shard_map_flat`."""
+    return _axsize(mesh, dp_axes(mesh))
+
+
+def flat_axis_spec(mesh: Mesh) -> P:
+    """PartitionSpec placing a leading flattened run×client axis over the
+    mesh data axes (prefix form: applies to every leaf of a pytree arg)."""
+    dp = dp_axes(mesh)
+    return P(dp if len(dp) > 1 else dp[0])
+
+
+def can_shard_flat(mesh: Optional[Mesh], n_flat: int) -> bool:
+    """True when a flat batch of `n_flat` runs×clients can go under
+    `shard_map_flat` on `mesh`: every device must take an equal slice
+    (shard_map requires exact divisibility; indivisible batches fall back
+    to the single-program vmap path)."""
+    if mesh is None:
+        return False
+    n = data_axis_size(mesh)
+    return n >= 1 and n_flat % n == 0
+
+
+def shard_map_flat(fn: Callable, mesh: Mesh,
+                   leading: Sequence[bool]) -> Callable:
+    """Put a vmapped program under `jax.shard_map` across the mesh data
+    axes. `fn` is a function whose arguments flagged True in `leading`
+    carry a leading flattened run×client axis (False ⇒ replicated scalars,
+    e.g. the step counter) and whose *every* output carries that axis.
+    Each device then advances its slice of the batch in one compiled
+    program; per-run math never crosses the axis, so no collectives are
+    introduced and per-run results are bit-identical to the plain vmap
+    path (pinned in tests/test_fleet.py on a 1-device mesh)."""
+    spec = flat_axis_spec(mesh)
+    in_specs = tuple(spec if lead else P() for lead in leading)
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=spec,
+                     check_rep=False)
 
 
 def _axsize(mesh, axes):

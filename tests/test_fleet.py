@@ -1,0 +1,317 @@
+"""Tests for fleet-scale execution (DESIGN.md §11) and the `launch`
+facade: participation-trace determinism, bit-identical fleet runs,
+kill-and-resume == uninterrupted, shard_map == vmap on a 1-device mesh,
+one compiled program per cohort, and `launch` dispatch bit-identity
+against the deprecated entry points (`run`, `run_batch`, `run_scenario`,
+`iterators`/`batch_iterators`)."""
+import warnings
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (BatchAxes, Experiment, FleetResult, launch, run,
+                       run_batch)
+from repro.api import trainer as trainer_mod
+from repro.configs import FedConfig
+from repro.data import batch_iterator, make_image_dataset
+from repro.launch.mesh import make_cohort_mesh
+from repro.scenarios import (FleetSpec, get_fleet, get_scenario, list_fleets,
+                             materialize, materialize_cohort, register_fleet,
+                             run_fleet, run_scenario)
+
+KEY = jax.random.PRNGKey(0)
+SIDE = 8
+N_CLASSES = 4
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _tiny_image_model(side=SIDE, n_classes=N_CLASSES):
+    dim = side * side * 3
+
+    def init(key):
+        return {"w": 0.02 * jax.random.normal(key, (dim, n_classes)),
+                "b": jnp.zeros((n_classes,))}
+
+    def forward(params, batch):
+        x = batch["images"].astype(jnp.float32)
+        return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+    def loss_fn(params, batch):
+        logits = forward(params, batch)
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(
+            logits, batch["labels"][:, None].astype(jnp.int32), -1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    return TinyModel(init, loss_fn, forward)
+
+
+MODEL = _tiny_image_model()
+FED = FedConfig(n_clients=4, pool_size=1, e_local=2, e_warmup=1,
+                learning_rate=1e-2)
+
+# Tiny but structurally honest fleet: the trace draws from a 1000-client
+# population, each round materializes only its 4-client cohort.
+TINY_FLEET = FleetSpec(name="tiny_test_fleet", fleet_size=1_000,
+                       cohort_size=4, rounds=2, samples_per_client=16,
+                       n_classes=N_CLASSES, side=SIDE, batch_size=8,
+                       n_test=64, seed=3)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Participation traces
+# ---------------------------------------------------------------------------
+
+def test_uniform_trace_deterministic_and_in_range():
+    spec = TINY_FLEET
+    for r in range(4):
+        a, b = spec.cohort(r), spec.cohort(r)
+        np.testing.assert_array_equal(a, b)         # pure in (spec, round)
+        assert a.shape == (spec.cohort_size,)
+        assert len(set(a.tolist())) == spec.cohort_size   # no replacement
+        assert a.min() >= 0 and a.max() < spec.fleet_size
+        np.testing.assert_array_equal(a, np.sort(a))
+    assert spec.cohort(0).tolist() != spec.cohort(1).tolist()
+    # the seed, not the name, keys the draw
+    assert (spec.replace(seed=4).cohort(0).tolist()
+            != spec.cohort(0).tolist())
+
+
+def test_cyclic_trace_walks_the_fleet():
+    spec = TINY_FLEET.replace(participation="cyclic", fleet_size=10,
+                              cohort_size=4)
+    np.testing.assert_array_equal(spec.cohort(0), [0, 1, 2, 3])
+    np.testing.assert_array_equal(spec.cohort(1), [4, 5, 6, 7])
+    np.testing.assert_array_equal(spec.cohort(2), [8, 9, 0, 1])  # wraps
+
+
+def test_unknown_participation_rejected():
+    with pytest.raises(ValueError, match="participation"):
+        TINY_FLEET.replace(participation="lottery")
+
+
+def test_cohort_materialization_pure():
+    a = materialize_cohort(TINY_FLEET, 1)
+    b = materialize_cohort(TINY_FLEET, 1)
+    assert a.client_ids == b.client_ids
+    for ca, cb in zip(a.client_data, b.client_data):
+        np.testing.assert_array_equal(ca["images"], cb["images"])
+        np.testing.assert_array_equal(ca["labels"], cb["labels"])
+    # per-client shards are keyed by client id, skewed per client
+    assert len(a.client_data) == TINY_FLEET.cohort_size
+    assert a.client_data[0]["images"].shape[0] \
+        == TINY_FLEET.samples_per_client
+
+
+# ---------------------------------------------------------------------------
+# Fleet runs: determinism, resume, shard_map == vmap, one program/cohort
+# ---------------------------------------------------------------------------
+
+def test_fleet_run_deterministic():
+    r1 = run_fleet(TINY_FLEET, MODEL, fed=FED)
+    r2 = run_fleet(TINY_FLEET, MODEL, fed=FED)
+    assert isinstance(r1, FleetResult)
+    assert [c.clients for c in r1.cohorts] == [c.clients for c in r2.cohorts]
+    _assert_trees_equal(r1.params, r2.params)
+    assert r1.final_metric == r2.final_metric
+    assert r1.clients_trained == TINY_FLEET.cohort_size * TINY_FLEET.rounds
+    assert r1.fed.n_clients == TINY_FLEET.cohort_size
+
+
+def test_fleet_resume_matches_uninterrupted(tmp_path):
+    full = run_fleet(TINY_FLEET, MODEL, fed=FED)
+    # "preempted" after round 0, then restarted with the same call
+    run_fleet(TINY_FLEET, MODEL, fed=FED, checkpoint_dir=str(tmp_path),
+              rounds=1)
+    resumed = run_fleet(TINY_FLEET, MODEL, fed=FED,
+                        checkpoint_dir=str(tmp_path))
+    assert resumed.resumed_from == 0
+    assert [c.round for c in resumed.cohorts] == [1]
+    _assert_trees_equal(full.params, resumed.params)
+    assert full.final_metric == resumed.final_metric
+
+
+def test_fleet_shard_map_matches_vmap():
+    """The mesh path puts the flattened run×client axis under shard_map;
+    on a 1-device mesh it must be bit-identical to the vmap path."""
+    mesh = make_cohort_mesh(TINY_FLEET.cohort_size)
+    vmapped = run_fleet(TINY_FLEET, MODEL, fed=FED)
+    sharded = run_fleet(TINY_FLEET, MODEL, fed=FED, mesh=mesh)
+    _assert_trees_equal(vmapped.params, sharded.params)
+    assert vmapped.final_metric == sharded.final_metric
+
+
+def test_fleet_one_program_per_cohort():
+    """Rounds past the first reuse the first round's compiled cohort
+    program — the step caches must not grow."""
+    run_fleet(TINY_FLEET, MODEL, fed=FED, rounds=1)     # pays the compile
+    warm = (len(trainer_mod._STEP_CACHE)
+            + len(trainer_mod._SHARDED_CACHE))
+    run_fleet(TINY_FLEET.replace(rounds=3), MODEL, fed=FED)
+    assert (len(trainer_mod._STEP_CACHE)
+            + len(trainer_mod._SHARDED_CACHE)) == warm
+
+
+def test_fleet_eval_cadence():
+    res = run_fleet(TINY_FLEET.replace(rounds=4), MODEL, fed=FED,
+                    eval_every=2)
+    metrics = [c.global_metric for c in res.cohorts]
+    assert metrics[0] is None and metrics[2] is None
+    assert metrics[1] is not None and metrics[3] is not None
+    assert res.final_metric == metrics[3]
+
+
+def test_fleet_rejects_non_independent_strategy():
+    for bad in ("fedelmy", "fedseq", "metafed"):
+        with pytest.raises(ValueError, match="independent"):
+            run_fleet(TINY_FLEET.replace(strategy=bad), MODEL, fed=FED)
+
+
+def test_fleet_registry_roundtrip():
+    assert {"fleet_100k", "fleet_1m_cyclic", "fleet_smoke"} \
+        <= set(list_fleets())
+    assert get_fleet("fleet_100k").fleet_size == 100_000
+    assert get_fleet("fleet_1m_cyclic").participation == "cyclic"
+    spec = register_fleet(TINY_FLEET.replace(name="tiny_registered"))
+    assert get_fleet("tiny_registered") == spec
+
+
+# ---------------------------------------------------------------------------
+# launch: dispatch + bit-identity with the deprecated entry points
+# ---------------------------------------------------------------------------
+
+def _client_iters(seed=0):
+    ds = make_image_dataset(n_samples=160, n_classes=N_CLASSES, side=SIDE,
+                            seed=seed)
+    return [batch_iterator({"images": ds.images[i::4],
+                            "labels": ds.labels[i::4]}, 8, seed=seed * 10 + i)
+            for i in range(4)]
+
+
+def test_launch_experiment_matches_deprecated_run():
+    res = launch(Experiment(model=MODEL, client_iters=_client_iters(),
+                            fed=FED, strategy="fedseq", key=KEY))
+    with pytest.warns(DeprecationWarning, match="launch"):
+        old = run(Experiment(model=MODEL, client_iters=_client_iters(),
+                             fed=FED, strategy="fedseq", key=KEY))
+    _assert_trees_equal(res.params, old.params)
+
+
+def test_launch_axes_matches_deprecated_run_batch():
+    axes = BatchAxes(seeds=(0, 1), client_iters_for_seed=_client_iters)
+    res = launch(Experiment(model=MODEL, client_iters=_client_iters(0),
+                            fed=FED, strategy="dfedavgm"), axes=axes)
+    with pytest.warns(DeprecationWarning, match="launch"):
+        old = run_batch(Experiment(model=MODEL,
+                                   client_iters=_client_iters(0),
+                                   fed=FED, strategy="dfedavgm"), axes)
+    assert len(res.runs) == len(old.runs) == 2
+    for a, b in zip(res.runs, old.runs):
+        _assert_trees_equal(a.params, b.params)
+
+
+def test_launch_list_dispatch():
+    exps = [Experiment(model=MODEL, client_iters=_client_iters(s), fed=FED,
+                       strategy="fedseq", key=jax.random.PRNGKey(s))
+            for s in (0, 1)]
+    batch = launch(exps)
+    assert len(batch.runs) == 2
+
+
+def test_launch_scenario_matches_deprecated_run_scenario():
+    spec = get_scenario("dir_label_skew").replace(
+        n_samples=160, n_test=32, side=SIDE, batch_size=8)
+    res = launch(spec, MODEL, fed=FED, strategies=("fedseq",), seeds=(0,))
+    with pytest.warns(DeprecationWarning, match="launch"):
+        old = run_scenario(spec, MODEL, fed=FED, strategies=("fedseq",),
+                           seeds=(0,))
+    _assert_trees_equal(res.runs[0].params, old.runs[0].params)
+
+
+def test_launch_fleet_by_spec_and_by_name():
+    direct = run_fleet(TINY_FLEET, MODEL, fed=FED)
+    via_launch = launch(TINY_FLEET, MODEL, fed=FED)
+    _assert_trees_equal(direct.params, via_launch.params)
+    register_fleet(TINY_FLEET.replace(name="tiny_by_name"))
+    named = launch("tiny_by_name", MODEL, fed=FED)
+    _assert_trees_equal(direct.params, named.params)
+
+
+def test_launch_rejects_bad_targets():
+    with pytest.raises(ValueError, match="neither a registered fleet"):
+        launch("no_such_target")
+    with pytest.raises(TypeError, match="cannot dispatch"):
+        launch(42)
+    with pytest.raises(TypeError, match="only Experiments"):
+        launch([1, 2, 3])
+    with pytest.raises(ValueError, match="model= and fed="):
+        launch(TINY_FLEET)
+
+
+# ---------------------------------------------------------------------------
+# streams(): the unified stream surface
+# ---------------------------------------------------------------------------
+
+def _tiny_scenario_data():
+    spec = get_scenario("dir_label_skew").replace(
+        n_samples=160, n_test=32, side=SIDE, batch_size=8)
+    return materialize(spec, seed=0)
+
+
+def test_streams_match_deprecated_iterators():
+    data = _tiny_scenario_data()
+    new = data.streams()
+    with pytest.warns(DeprecationWarning, match="streams"):
+        old = data.iterators()
+    assert len(new) == len(old)
+    for p, q in zip(new, old):
+        np.testing.assert_array_equal(np.asarray(next(p)["images"]),
+                                      np.asarray(next(q)["images"]))
+
+
+def test_streams_device_false_matches_deprecated_batch_iterators():
+    data = _tiny_scenario_data()
+    new = data.streams(device=False)
+    with pytest.warns(DeprecationWarning, match="streams"):
+        old = data.batch_iterators()
+    for p, q in zip(new, old):
+        a, b = next(p), next(q)
+        np.testing.assert_array_equal(a["images"], b["images"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_streams_forms_bit_identical():
+    """DataPlan (device) and batch_iterator (host) streams yield the same
+    batch sequence — the contract that lets callers flip device/scan
+    freely."""
+    data = _tiny_scenario_data()
+    dev, host = data.streams(), data.streams(device=False)
+    for p, q in zip(dev, host):
+        for _ in range(3):
+            a, b = next(p), next(q)
+            np.testing.assert_array_equal(np.asarray(a["images"]),
+                                          np.asarray(b["images"]))
+            np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                          np.asarray(b["labels"]))
+
+
+def test_cohort_streams_scan_routing():
+    cohort = materialize_cohort(TINY_FLEET, 0)
+    scan_plans = cohort.streams()
+    step_plans = cohort.streams(scan=False)
+    assert all(p.scan for p in scan_plans)
+    assert not any(p.scan for p in step_plans)
+    for p, q in zip(scan_plans, cohort.streams()):
+        np.testing.assert_array_equal(np.asarray(next(p)["images"]),
+                                      np.asarray(next(q)["images"]))
