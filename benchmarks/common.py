@@ -94,16 +94,15 @@ def bench_spec(name: str, **overrides):
 
 def setup_from_spec(spec, seed=0, model=None):
     """(model, iters, acc_fn) from a materialized scenario — the common
-    shape every tableX benchmark consumes. `iters` are `DataPlan`s
-    (device-resident shards) with scan=False: these setups train the
-    paper CNN, whose convolutions inside a scan body hit XLA CPU's slow
-    in-loop conv lowering — the per-step dispatch path over the resident
-    arrays is the fast configuration here (DESIGN.md §9)."""
+    shape every tableX benchmark consumes. `iters` are scan-routed
+    `DataPlan`s: the paper CNN's local phases compile as one scan program
+    each, like every other model — conv losses lower as im2col + blocked
+    GEMM (kernels/local_step.py), so the old XLA-CPU conv-in-scan cliff
+    (and its `scan=False` carve-out) is gone (DESIGN.md §9)."""
     if model is None:
         model = build_model(get_arch("paper-cnn"))
     data = materialize(spec, seed)
-    return model, data.streams(scan=False), _acc_fn(model,
-                                                    data.eval_dataset())
+    return model, data.streams(), _acc_fn(model, data.eval_dataset())
 
 
 def label_skew_setup(n_clients=4, beta=0.3, seed=0):

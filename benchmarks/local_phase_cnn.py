@@ -1,0 +1,80 @@
+"""local_phase_cnn micro-benchmark: the conv model's scanned local phase.
+
+Before kernels/local_step.py, putting `lax.conv` inside `lax.scan` hit a
+~20× XLA-CPU cliff, so conv models carried a `DataPlan(scan=False)`
+carve-out and paid one jitted dispatch plus a host batch upload per SGD
+step. The fused im2col + blocked-GEMM loss twin scans at parity: this
+benchmark times the paper CNN's full local phase (Alg. 1 lines 3-17)
+both ways on a reduced-width config and reports steps/sec each way. The
+derived `speedup` is the acceptance metric for deleting the carve-out —
+scanned-fused must be no slower than per-step dispatch (≥ 1×) — and
+scripts/bench_compare.py gates the wall time against BENCH_baseline.json
+like every other benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from benchmarks.common import bench_spec, emit_csv, fed_config
+from repro.api import LocalTrainer
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.scenarios import materialize
+
+REPEATS = 3
+WIDTH = 8     # base conv width: same graph shape as the paper CNN (64),
+D_FF = 64     # scaled so REPEATS phases × both paths run in CI seconds
+
+
+def _time_phases(phase_fn, repeats: int) -> float:
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = phase_fn()
+    jax.block_until_ready(out)
+    return time.time() - t0
+
+
+def run():
+    t0 = time.time()
+    cfg = dataclasses.replace(get_arch("paper-cnn"), d_model=WIDTH,
+                              d_ff=D_FF)
+    model = build_model(cfg)
+    fed = fed_config(n_clients=2)
+    spec = bench_spec("dir_label_skew", n_clients=2,
+                      partitioner_params={"beta": 0.3}, batch_size=16)
+    data = materialize(spec, 0)
+    trainer = LocalTrainer(model.loss_fn, fed)
+    m0 = model.init(jax.random.PRNGKey(0))
+    steps_per_phase = fed.pool_size * fed.e_local
+
+    # per-step comparator via the iterator protocol (host batches, one
+    # dispatch per step); scanned path gathers from the device-resident plan
+    it = data.streams(device=False)[0]
+    plan = data.streams()[0]
+
+    # compile + warm both paths before timing
+    jax.block_until_ready(trainer.local_client_train(m0, it)[0])
+    jax.block_until_ready(trainer.local_client_train_scanned(m0, plan)[0])
+
+    t_iter = _time_phases(
+        lambda: trainer.local_client_train(m0, it)[0], REPEATS)
+    t_scan = _time_phases(
+        lambda: trainer.local_client_train_scanned(m0, plan)[0], REPEATS)
+
+    iter_sps = REPEATS * steps_per_phase / t_iter
+    scan_sps = REPEATS * steps_per_phase / t_scan
+    speedup = scan_sps / iter_sps
+    print(f"local_phase_cnn: iterator {iter_sps:.0f} steps/s, "
+          f"scanned {scan_sps:.0f} steps/s, speedup {speedup:.2f}x",
+          flush=True)
+    emit_csv("local_phase_cnn", t0,
+             f"scanned_steps_per_s={scan_sps:.0f};"
+             f"iter_steps_per_s={iter_sps:.0f};speedup={speedup:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -21,8 +21,9 @@ be shared across runs of a batch (the engine rejects sharing); the
 BatchAxes factories exist for exactly that. Sharing the *device arrays*
 under several DataPlans is free and encouraged. When every stream of a
 group is a scan-routed DataPlan, the group's local phases run
-scan-compiled with stacked index tensors (one program per phase,
-DESIGN.md §9; conv models pass scan=False and keep per-step dispatch).
+scan-compiled with stacked index tensors (one program per phase, every
+model family — conv losses lower scan-safe via kernels/local_step.py;
+DESIGN.md §9).
 
 Grouping rules (see DESIGN.md §6, §8):
 

@@ -48,10 +48,10 @@ class Experiment:
     `client_iters` entries are per-client infinite batch streams: either
     plain iterators (`repro.data.batch_iterator`) or device-resident
     `repro.data.DataPlan`s — scan-routed plan visits execute as one
-    compiled program per local phase (DESIGN.md §9) with bit-identical
-    results; custom-step blocks, callback runs and `scan=False` plans
-    (conv models on CPU) consume the same cursor via the per-step
-    path."""
+    compiled program per local phase for every model family (DESIGN.md
+    §9) with bit-identical results; custom-step blocks, callback runs
+    and `scan=False` plans (a per-step oracle/debug knob) consume the
+    same cursor via the per-step path."""
     model: Any                        # repro.models.Model (init/loss_fn/...)
     client_iters: Sequence[Any]       # per-client streams (see docstring)
     fed: FedConfig

@@ -276,8 +276,9 @@ def interpret(experiment, plan: StrategyPlan) -> StrategyOutput:
 
 def _train_visit(trainer: LocalTrainer, m: PyTree, it, n_steps: int):
     """Plain training over one client stream: scan-routed DataPlans
-    compile the whole visit into one scan; iterators (and scan=False
-    plans) keep the per-step loop."""
+    compile the whole visit into one scan (every model family — conv
+    losses are scan-safe via kernels/local_step.py); iterators and
+    scan=False plans keep the per-step loop."""
     if wants_scan(it):
         m, _ = trainer.train_scanned(m, it, n_steps)
     else:

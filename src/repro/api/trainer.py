@@ -22,6 +22,7 @@ from repro.api.pools import PoolBackend, backend_for
 from repro.api.results import ModelRecord
 from repro.configs.base import FedConfig
 from repro.core import distances as D
+from repro.kernels.local_step import fused_loss_for
 from repro.data.plan import (DataPlan, stack_plan_arrays,
                              stack_plan_indices)
 from repro.optim import make_optimizer
@@ -172,6 +173,39 @@ def _gather(arrays: PyTree, row: jax.Array) -> PyTree:
     return jax.tree.map(lambda a: a[row], arrays)
 
 
+@jax.custom_batching.custom_vmap
+def _runtime_barrier(xs):
+    """`lax.optimization_barrier` with a vmap rule (this jax version has
+    none): barrier the batched arrays directly — identity either way."""
+    return jax.lax.optimization_barrier(xs)
+
+
+@_runtime_barrier.def_vmap
+def _runtime_barrier_vmap(axis_size, in_batched, xs):
+    return jax.lax.optimization_barrier(xs), in_batched[0]
+
+
+def _scan1(body: Callable, carry, xs):
+    """`lax.scan`, except a single-row xs applies the body directly. XLA
+    deletes trip-count-1 while loops and then fuses across the former loop
+    boundary differently from the dispatched per-step program (observed on
+    the conv model: the backward and the Adam update contract FMAs across
+    the unrolled boundary, a 1-ULP divergence) — which would break the
+    scanned-vs-per-step bit-identity contract exactly in the one-step-phase
+    corner (e.g. `e_warmup=1` visits, pool_size=1 runs). Applying the body
+    once traces the same graph the per-step path compiles — behind an
+    optimization barrier, so trace-time constants in xs (the step counter
+    from `jnp.arange`) stay runtime values exactly like scan loop
+    variables, instead of constant-folding through the Adam bias
+    correction with different rounding."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if n == 1:
+        x0 = _runtime_barrier(jax.tree.map(lambda a: a[0], xs))
+        carry, y = body(carry, x0)
+        return carry, jax.tree.map(lambda a: a[None], y)
+    return jax.lax.scan(body, carry, xs)
+
+
 def _scan_steps(task_and_grads: Callable, opt: Optimizer, params: PyTree,
                 arrays: PyTree, idx: jax.Array):
     """Shared scan over (n_steps, batch) index rows from a fresh optimizer
@@ -184,14 +218,17 @@ def _scan_steps(task_and_grads: Callable, opt: Optimizer, params: PyTree,
         p, o = opt.update(p, grads, o, s)
         return (p, o), task
 
-    (params, _), tasks = jax.lax.scan(
+    (params, _), tasks = _scan1(
         body, (params, opt.init(params)), (jnp.arange(idx.shape[0]), idx))
     return params, tasks
 
 
 def _scanned_train_core(loss_fn: Callable, opt: Optimizer) -> Callable:
     """(params, arrays, idx) → (params, last task): `make_plain_step`'s body
-    scanned over the (n_steps, batch) index rows."""
+    scanned over the (n_steps, batch) index rows. `loss_fn` arrives already
+    resolved through the capability probe (`_compiled_steps`), so for conv
+    models this body contains only pad/slice/GEMM — no `lax.conv`, no
+    conv-in-scan cliff (kernels/local_step.py, DESIGN.md §9)."""
 
     def core(params, arrays, idx):
         params, tasks = _scan_steps(jax.value_and_grad(loss_fn), opt,
@@ -208,7 +245,9 @@ def _scanned_local_core(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
     slots nested around a scan over steps. The pool pytree is the outer
     carry (fixed-capacity NamedTuple — structure is static), so S × e_local
     dispatches collapse into one compiled program. α/β ride traced, like
-    the batched steps — same bits as the baked constants."""
+    the batched steps — same bits as the baked constants. Like
+    `_scanned_train_core`, `loss_fn` is the probe-resolved step loss —
+    conv models scan their fused GEMM twin here."""
     full_loss = hp_regularized_loss(loss_fn, fed, backend)
 
     def core(m_in, arrays, idx, alpha, beta):
@@ -225,7 +264,7 @@ def _scanned_local_core(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
                                    arrays, idx_j)
             return pool.append(m), tasks[-1]
 
-        pool, tasks = jax.lax.scan(slot, backend.create(m_in, fed), idx)
+        pool, tasks = _scan1(slot, backend.create(m_in, fed), idx)
         return pool.average(), pool, tasks
 
     return core
@@ -279,14 +318,21 @@ def _compiled_steps(loss_fn: Callable, fed: FedConfig, opt_name: str,
                     backend: PoolBackend) -> _CompiledSteps:
     def build():
         opt = make_optimizer(opt_name, lr, wd)
-        plain_core = _scanned_train_core(loss_fn, opt)
-        local_core = _scanned_local_core(loss_fn, fed, opt, backend)
-        vm_plain = _vmapped_plain_step(loss_fn, opt)
-        vm_pool = _vmapped_pool_step(loss_fn, fed, opt, backend)
+        # per-model capability probe: conv models registered a scan-safe
+        # GEMM-formulated loss twin (kernels/local_step.py) and route every
+        # step through it; matmul models resolve to themselves and keep
+        # their current step bodies. EVERY variant — per-step, scanned,
+        # batched, shard-mapped — is built over the SAME resolved loss, so
+        # the cross-path bit-identity contracts hold by construction.
+        step_loss = fused_loss_for(loss_fn)
+        plain_core = _scanned_train_core(step_loss, opt)
+        local_core = _scanned_local_core(step_loss, fed, opt, backend)
+        vm_plain = _vmapped_plain_step(step_loss, opt)
+        vm_pool = _vmapped_pool_step(step_loss, fed, opt, backend)
         return _CompiledSteps(
             opt=opt,
-            pool_step=make_pool_step(loss_fn, fed, opt, backend),
-            plain_step=make_plain_step(loss_fn, opt),
+            pool_step=make_pool_step(step_loss, fed, opt, backend),
+            plain_step=make_plain_step(step_loss, opt),
             batched_pool_step=jax.jit(vm_pool, donate_argnums=(0, 1)),
             batched_plain_step=jax.jit(vm_plain, donate_argnums=(0, 1)),
             scanned_plain=jax.jit(plain_core),

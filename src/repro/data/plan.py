@@ -67,11 +67,13 @@ class DataPlan:
         if not drop_remainder and n % self.batch_size:
             raise _ragged_error(n, self.batch_size)
         # scan=False opts out of the scan-compiled local phase (results are
-        # bit-identical either way): XLA CPU lowers convolutions *inside* a
-        # scan/while body to a ~20× slower single-shot code path than the
-        # dispatched conv thunks, so conv models should keep the per-step
-        # loop — which still benefits from the device-resident arrays
-        # (batches gather on device instead of numpy-gather + re-upload).
+        # bit-identical either way) — a per-step oracle/debug knob. It is
+        # no longer required for any model family: conv losses lower as
+        # im2col + blocked GEMM inside the scan body (kernels/
+        # local_step.py), so the old XLA-CPU conv-in-scan cliff that once
+        # forced conv models onto the per-step loop is gone. The per-step
+        # path still benefits from the device-resident arrays (batches
+        # gather on device instead of numpy-gather + re-upload).
         # See DESIGN.md §9.
         self.scan = scan
         self.arrays = {k: jnp.asarray(a) for k, a in arrays.items()}

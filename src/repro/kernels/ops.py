@@ -9,18 +9,50 @@ be switched to these via config (use_pallas) — both paths share oracles.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.chunk_scan import gla_chunk_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.local_step import conv2d_gemm, maxpool2x2, sgd_update_tree
 from repro.kernels.pool_distance import (distances_from_stats,
                                          pool_distance_stats)
 
+# Backend probes, resolved lazily ONCE per process (the backend cannot
+# change after jax initializes; re-probing `jax.default_backend()` on every
+# kernel call was pure per-call overhead). `REPRO_KERNEL_INTERPRET=1`
+# forces interpret mode on TPU — the kernel bodies execute as jax ops for
+# parity debugging against the ref paths; `=0` forces it off.
+_INTERPRET: Optional[bool] = None
+_ON_TPU: Optional[bool] = None
+
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    global _INTERPRET
+    if _INTERPRET is None:
+        env = os.environ.get("REPRO_KERNEL_INTERPRET", "").strip().lower()
+        if env in ("1", "true", "yes", "on"):
+            _INTERPRET = True
+        elif env in ("0", "false", "no", "off"):
+            _INTERPRET = False
+        else:
+            _INTERPRET = jax.default_backend() != "tpu"
+    return _INTERPRET
+
+
+def _use_pallas() -> bool:
+    """Routing for the local-step ops: real Mosaic kernels on TPU, the
+    pure-jnp twins elsewhere — interpret-mode Pallas inside a training
+    loop is strictly slower than XLA's fused jnp lowering, so off-TPU the
+    jnp twin IS the production path (ROADMAP item 2). With
+    REPRO_KERNEL_INTERPRET=1 on TPU the kernels still run, interpreted."""
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
@@ -80,3 +112,36 @@ def gla_chunked(q, k, v, log_decay, *, chunk: int, pre=False, bonus=None,
     S, ys = jax.lax.scan(step, state, (qc, kc, vc, ldc))
     y = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, vd)
     return y, S
+
+
+# ---------------------------------------------------------------------------
+# Fused local-step ops (kernels/local_step.py): the conv CNN's scan-safe
+# hot path. No jit wrappers here — these are always called from inside the
+# trainer's compiled step programs (or a jitted eval), never eagerly.
+# ---------------------------------------------------------------------------
+
+def fused_conv2d(x, w, b):
+    """SAME stride-1 NHWC conv as im2col + blocked GEMM — forward and
+    backward contain no `lax.conv`, so the op is scan-safe (no conv-in-scan
+    cliff, DESIGN.md §9) and vmaps over per-run weights as a batched
+    matmul (no grouped-conv fallback, DESIGN.md §6). Pallas kernel on TPU,
+    jnp GEMM twin elsewhere."""
+    return conv2d_gemm(x, w, b, use_pallas=_use_pallas(),
+                       interpret=_interpret())
+
+
+def fused_maxpool2x2(x):
+    """Scan-safe non-overlapping 2×2 max pool (reshape + max; the VJP is
+    mask arithmetic, not select-and-scatter)."""
+    return maxpool2x2(x)
+
+
+def fused_sgd(params, grads, *, lr, wd=0.0):
+    """SGD update p ← p − lr·(g + wd·p) with f32 master math. On TPU the
+    flattened parameter vector goes through ONE blocked Pallas sweep
+    (`local_step.sgd_update_flat`); elsewhere the per-leaf jnp update runs
+    directly — the math is elementwise, so both routes are bit-identical
+    to `optimizers.sgd`'s update rule."""
+    return sgd_update_tree(params, grads, lr=lr, wd=wd,
+                           use_pallas=_use_pallas(),
+                           interpret=_interpret())

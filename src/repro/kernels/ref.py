@@ -40,6 +40,37 @@ def pool_distance_ref(w_flat, pool_flat):
             "norm": jnp.sum(m * m, axis=1)}
 
 
+def matmul_ref(a, b):
+    """f32 GEMM ground truth for `local_step.matmul_blocked`."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d_ref(x, w, b):
+    """SAME stride-1 NHWC conv via `lax.conv_general_dilated` — the
+    semantically independent oracle for `local_step.conv2d_gemm` (the
+    im2col + GEMM path must match it to f32 tolerance; bit-identity is
+    pinned between the engine's own step paths, which share one
+    formulation)."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def maxpool2x2_ref(x):
+    """Non-overlapping 2×2 max pool via `lax.reduce_window` — forward
+    oracle for `local_step.maxpool2x2`."""
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def sgd_update_ref(p, g, *, lr, wd=0.0):
+    """Per-element SGD with f32 master math — `optimizers.sgd`'s exact
+    update rule, the bit-level twin of `local_step.sgd_update_flat`."""
+    g32 = g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * g32).astype(p.dtype)
+
+
 def gla_recurrence_ref(q, k, v, log_decay, *, bonus=None, initial_state=None):
     """Naive step-by-step recurrence (the semantic ground truth).
 

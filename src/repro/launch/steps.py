@@ -24,6 +24,7 @@ from repro.configs.base import ArchConfig, FedConfig, ShapeConfig
 from repro.core.distances import (d1_pool_distance, d2_anchor_distance,
                                   log_scale)
 from repro.core.pool import ModelPool, MomentPool
+from repro.kernels.local_step import fused_loss_for
 from repro.models import build_model
 from repro.optim import make_optimizer
 
@@ -37,6 +38,10 @@ I32 = jnp.int32
 def batch_specs_for(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
     b, t = shape.global_batch, shape.seq_len
     dt = jnp.dtype(cfg.param_dtype)
+    if cfg.family == "cnn":
+        # image classifier: 32×32×3 inputs, one label per example
+        return {"images": jax.ShapeDtypeStruct((b, 32, 32, 3), jnp.float32),
+                "labels": jax.ShapeDtypeStruct((b,), I32)}
     if shape.kind in ("train", "prefill"):
         specs = {"tokens": jax.ShapeDtypeStruct((b, t), I32)}
         if shape.kind == "train":
@@ -115,9 +120,14 @@ def make_step(cfg: ArchConfig, shape: ShapeConfig,
         # d1/d2 regularizer grads are computed once, not per microbatch).
         n_micro = int(os.environ.get("REPRO_MICROBATCH", "1"))
 
+        # same capability probe as the trainer: conv models resolve to
+        # their fused (im2col + GEMM) loss twin, so the REPRO_MICROBATCH
+        # accumulation scan below never puts a lax.conv in a scan body
+        step_loss = fused_loss_for(model.loss_fn)
+
         def train_step(params, opt_state, batch, pool, step):
             def task_loss(p, mb):
-                return model.loss_fn(p, mb)
+                return step_loss(p, mb)
 
             if n_micro > 1:
                 mb_batch = jax.tree.map(
@@ -167,10 +177,11 @@ def make_step(cfg: ArchConfig, shape: ShapeConfig,
 
 def shape_supported(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
     """The long_500k carve-out (DESIGN.md §4): decode at 500k runs only for
-    bounded-state / sub-quadratic archs."""
+    bounded-state / sub-quadratic archs. The cnn check runs first so a
+    classifier arch gets the accurate skip reason, not a KV-cache one."""
+    if shape.kind in ("prefill", "decode") and cfg.family == "cnn":
+        return False, "classifier arch: no autoregressive serving"
     if shape.name == "long_500k" and not cfg.supports_long_decode:
         return False, ("full-attention KV at 500k context — skipped per "
                        "DESIGN.md (no sub-quadratic variant for this arch)")
-    if shape.kind in ("prefill", "decode") and cfg.family == "cnn":
-        return False, "classifier arch: no autoregressive serving"
     return True, ""

@@ -57,11 +57,11 @@ def build_clients(args, cfg):
                                seed=args.seed + 77)[0]
         test_batch = {"tokens": jnp.asarray(hold.tokens[:64, :-1]),
                       "labels": jnp.asarray(hold.tokens[:64, 1:])}
-    # device-resident plans, bit-identical to the batch_iterator streams
-    # on these seeds; conv models keep the per-step dispatch path (XLA
-    # CPU's in-scan convolutions are pathologically slow — DESIGN.md §9)
-    iters = [DataPlan(c, args.batch, seed=args.seed * 100 + i,
-                      scan=cfg.family != "cnn")
+    # device-resident scan-routed plans, bit-identical to the
+    # batch_iterator streams on these seeds. Conv models included: their
+    # losses lower as im2col + blocked GEMM (kernels/local_step.py), so
+    # the old conv-in-scan carve-out is gone (DESIGN.md §9)
+    iters = [DataPlan(c, args.batch, seed=args.seed * 100 + i)
              for i, c in enumerate(clients)]
     return iters, test_batch
 

@@ -1,6 +1,21 @@
 """The paper's experimental model family: a 3-block CNN classifier
 (appendix D.5) used for the faithful FedELMY reproduction on synthetic
-CIFAR-shaped data. Pure JAX (lax.conv), NHWC layout.
+CIFAR-shaped data. Pure JAX, NHWC layout.
+
+Two formulations of the same network:
+
+* ``forward`` — the classic `lax.conv` + `reduce_window` graph, kept as
+  the eval/serving forward (single dispatches outside any scan, where
+  XLA's conv thunks are fine).
+* the **fused step twin** — convs as im2col + blocked GEMM and pooling as
+  reshape-max (`kernels/ops.fused_conv2d` / `fused_maxpool2x2`), attached
+  to ``loss_fn`` under `kernels.local_step.FUSED_LOSS_ATTR`. The trainer's
+  capability probe resolves every compiled step (per-step, scanned,
+  batched) to this twin, so training graphs contain no `lax.conv` — the
+  conv-in-scan cliff and the vmapped grouped-conv fallback (DESIGN.md
+  §9/§6) never trigger. Twin vs. `lax.conv` agree to f32 tolerance; all
+  engine step paths share the twin, so their bit-identity contracts hold
+  exactly as for matmul models.
 """
 from __future__ import annotations
 
@@ -8,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.local_step import FUSED_LOSS_ATTR
+from repro.kernels.ops import fused_conv2d, fused_maxpool2x2
 from repro.models.layers import ACC, _he
 
 
@@ -22,6 +39,12 @@ def _conv(p, x, stride=1):
         x, p["w"], window_strides=(stride, stride), padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     return y + p["b"]
+
+
+def _xent(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
 
 
 def build_cnn(cfg: ArchConfig):
@@ -41,21 +64,32 @@ def build_cnn(cfg: ArchConfig):
                     "b": jnp.zeros((n_classes,), jnp.float32)},
         }
 
+    def _head(params, x):
+        x = x.reshape(x.shape[0], -1)                  # (B, 4*4*4w)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
     def forward(params, batch):
         x = batch["images"].astype(jnp.float32)        # (B, 32, 32, 3)
         for name in ("c1", "c2", "c3"):
             x = jax.nn.relu(_conv(params[name], x))
             x = jax.lax.reduce_window(
                 x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
-        x = x.reshape(x.shape[0], -1)                  # (B, 4*4*4w)
-        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
-        return x @ params["fc2"]["w"] + params["fc2"]["b"]
+        return _head(params, x)
+
+    def fused_forward(params, batch):
+        x = batch["images"].astype(jnp.float32)
+        for name in ("c1", "c2", "c3"):
+            p = params[name]
+            x = jax.nn.relu(fused_conv2d(x, p["w"], p["b"]))
+            x = fused_maxpool2x2(x)
+        return _head(params, x)
 
     def loss_fn(params, batch):
-        logits = forward(params, batch)
-        labels = batch["labels"]
-        lse = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-        return jnp.mean(lse - gold)
+        return _xent(forward(params, batch), batch["labels"])
 
+    def fused_loss(params, batch):
+        return _xent(fused_forward(params, batch), batch["labels"])
+
+    setattr(loss_fn, FUSED_LOSS_ATTR, fused_loss)
     return Model(cfg, init, forward, loss_fn, None, None, None)

@@ -32,10 +32,11 @@ def sgd(lr: float, weight_decay: float = 0.0) -> Optimizer:
         return ()
 
     def update(params, grads, state, step):
-        def upd(p, g):
-            g = g.astype(F32) + weight_decay * p.astype(F32)
-            return (p.astype(F32) - lr * g).astype(p.dtype)
-        return jax.tree.map(upd, params, grads), state
+        # routes through the fused local-step sweep: one blocked Pallas
+        # pass over the flattened vector on TPU, the identical per-leaf
+        # jnp update elsewhere (elementwise math — same bits either way)
+        from repro.kernels.ops import fused_sgd
+        return fused_sgd(params, grads, lr=lr, wd=weight_decay), state
 
     return Optimizer("sgd", init, update)
 

@@ -101,9 +101,11 @@ class _ClientStreams:
 
         device=True (default) mints device-resident `DataPlan`s;
         `scan=True` routes the scan-compiled local phase (one program per
-        phase, DESIGN.md §9), `scan=False` keeps per-step dispatch over
-        the device arrays (conv models on XLA CPU). device=False returns
-        the legacy host-streaming `batch_iterator` form — the per-step
+        phase — every model family, conv included, since the fused
+        local-step kernels landed; DESIGN.md §9), `scan=False` keeps
+        per-step dispatch over the device arrays (a debugging/oracle
+        knob, no longer a conv carve-out). device=False returns the
+        legacy host-streaming `batch_iterator` form — the per-step
         oracle. All three produce bit-identical batch sequences."""
         base = self.seed if base_seed is None else base_seed
         if device:
@@ -290,8 +292,8 @@ def build_experiments(spec: ScenarioSpec, model, *,
     times) and two-phase (`metafed`) strategies, not just the chains.
     Per-strategy `strategy_options` keep the grouping — they're part of
     the key, as is `shots`. `scan=False` keeps the per-step dispatch path
-    over the device-resident shards — pass it for conv models on XLA CPU
-    (DESIGN.md §9)."""
+    over the device-resident shards (an oracle/debug knob — conv models
+    scan fine since kernels/local_step.py landed; DESIGN.md §9)."""
     fed = dataclasses.replace(fed, n_clients=spec.n_active)
     build_eval = eval_builder if eval_builder is not None else accuracy_eval
     datas = {seed: materialize(spec, seed) for seed in seeds}

@@ -262,8 +262,8 @@ def test_batched_pads_per_rank_heterogeneous_shards():
 
 def test_build_experiments_scan_flag_plumbs_through():
     """`build_experiments(..., scan=False)` (and run_scenario via **kw)
-    mints per-step-routed plans — the conv-on-CPU configuration reachable
-    through the public scenario API."""
+    mints per-step-routed plans — the per-step oracle/debug configuration
+    reachable through the public scenario API."""
     from repro.configs import FedConfig as FC
     from repro.scenarios import get_scenario
     from repro.scenarios.compile import build_experiments
@@ -293,9 +293,10 @@ def test_mixed_streams_fall_back_to_step_loop():
 
 
 def test_scan_false_plans_keep_step_loop_and_match():
-    """`DataPlan(scan=False)` (the conv-on-CPU configuration) opts out of
-    scan routing — the per-step loop consumes the device-resident arrays
-    through the same cursor, bit-identical to both other forms."""
+    """`DataPlan(scan=False)` (the per-step oracle/debug knob — no model
+    family needs it anymore) opts out of scan routing — the per-step loop
+    consumes the device-resident arrays through the same cursor,
+    bit-identical to both other forms."""
     model = _tiny_model()
     data = _client_data()
     noscan = [DataPlan(c, 4, seed=i, scan=False)
