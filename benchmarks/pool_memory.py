@@ -1,0 +1,108 @@
+"""Pool memory + local-phase throughput: dense vs low-rank factor pools.
+
+The claim behind DESIGN.md §13: `pool_backend="lowrank"` makes S-model
+diversity pools affordable at transformer scale. Three measurements:
+
+* pool bytes — a paper-default (S=5) pool over the reduced llama3.2-1b
+  transformer and over the probe MLP, dense stacked vs factor form at
+  r=8 (acceptance: ≥4× reduction on the transformer);
+* accuracy parity — fedelmy on the Dirichlet label-skew probe-MLP
+  scenario, dense vs lowrank r=8 (acceptance: within 1%);
+* local-phase steps/sec — warm scan-compiled fedelmy local phases per
+  backend on the probe MLP, plus a small reduced-transformer local phase
+  (the first large-model client through the strategy IR).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import (SCALE, emit_csv, fed_config, probe_mlp_setup,
+                               run_strategy, save_result)
+from repro.core.pool import LowRankDeltaPool, ModelPool, pool_nbytes
+
+RANK = 8
+PAPER_S = 5          # paper-default pool size for the byte comparison
+
+
+def _pool_bytes(params, capacity, rank):
+    """Bytes of a full dense stacked pool vs the factor pool at `rank`,
+    both seeded and filled to capacity (byte counts are value-independent,
+    so appending the seed params is enough)."""
+    dense = ModelPool.create(params, capacity)
+    low = LowRankDeltaPool.create(params, capacity, rank)
+    for _ in range(capacity - 1):
+        dense = dense.append(params)
+        low = low.append(params)
+    return pool_nbytes(dense), pool_nbytes(low)
+
+
+def _steps_per_sec(model, iters_for_run, fed, run_idx):
+    """Warm local-phase throughput: run fedelmy once to compile, once
+    timed; steps/sec over clients × S × e_local regularized steps."""
+    run_strategy("fedelmy", model, iters_for_run(run_idx), fed)
+    t0 = time.time()
+    run_strategy("fedelmy", model, iters_for_run(run_idx + 1), fed)
+    steps = fed.n_clients * fed.pool_size * fed.e_local
+    return steps / (time.time() - t0)
+
+
+def run():
+    t0 = time.time()
+    rows = {}
+
+    # -- probe MLP: accuracy parity + throughput, dense vs lowrank ---------
+    model, iters_for_run, acc = probe_mlp_setup()
+    accs = {}
+    for backend in ("stacked", "lowrank"):
+        fed = fed_config(pool_backend=backend, pool_rank=RANK)
+        res = run_strategy("fedelmy", model, iters_for_run(0), fed,
+                           eval_fn=acc)
+        accs[backend] = res.final_metric
+        rows[f"steps_per_sec_{backend}"] = _steps_per_sec(
+            model, iters_for_run, fed, 1)
+    rows["acc_dense"] = accs["stacked"]
+    rows["acc_lowrank"] = accs["lowrank"]
+    rows["acc_gap"] = abs(accs["stacked"] - accs["lowrank"])
+
+    mlp_dense, mlp_low = _pool_bytes(
+        model.init(jax.random.PRNGKey(0)), PAPER_S + 1, RANK)
+    rows["mlp_pool_bytes_dense"] = mlp_dense
+    rows["mlp_pool_bytes_lowrank"] = mlp_low
+
+    # -- reduced transformer: pool bytes + a small local phase -------------
+    from repro.configs import get_arch
+    from repro.data import DataPlan, make_lm_dataset
+    from repro.models import build_model
+    cfg = get_arch("llama3.2-1b").reduced()
+    tf = build_model(cfg)
+    tf_params = tf.init(jax.random.PRNGKey(0))
+    tf_dense, tf_low = _pool_bytes(tf_params, PAPER_S + 1, RANK)
+    ratio = tf_dense / tf_low
+    rows["tf_pool_bytes_dense"] = tf_dense
+    rows["tf_pool_bytes_lowrank"] = tf_low
+    rows["tf_mem_ratio"] = ratio
+
+    doms = make_lm_dataset(n_seqs=64, seq_len=32, vocab=cfg.vocab_size,
+                           n_domains=2, seed=0)
+    tf_fed = fed_config(n_clients=2, pool_size=2,
+                        e_local=min(3, SCALE["e_local"]), e_warmup=2,
+                        pool_backend="lowrank", pool_rank=RANK)
+
+    def tf_iters(seed):
+        return [DataPlan({"tokens": d.tokens[:, :-1],
+                          "labels": d.tokens[:, 1:]}, 8, seed=seed + i)
+                for i, d in enumerate(doms)]
+
+    rows["tf_steps_per_sec_lowrank"] = _steps_per_sec(tf, tf_iters, tf_fed, 0)
+
+    save_result("pool_memory", rows)
+    emit_csv("pool_memory", t0,
+             derived=f"tf_mem_ratio={ratio:.1f}x "
+                     f"acc_gap={rows['acc_gap']:.3f} "
+                     f"mlp_sps_lowrank={rows['steps_per_sec_lowrank']:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -24,19 +24,26 @@ BENCHMARKS = ("table1_accuracy", "table2_fewshot", "table3_ablation",
               "table4_order", "fig5_comm_cost", "fig6_compute_matched",
               "fig9_distance_measures", "fig10_pool_heatmap", "table9_pfl",
               "scenario_grid", "local_phase", "local_phase_cnn",
-              "roofline_report", "serving", "fleet_throughput")
+              "roofline_report", "serving", "fleet_throughput",
+              "pool_memory")
 
 
 def _list() -> None:
-    """Enumerate registered benchmarks, strategies (with their plan
-    topology/aggregation), pool backends, scenarios, and partitioners."""
+    """Enumerate registered benchmarks, architecture configs, strategies
+    (with their plan topology/aggregation), pool backends, scenarios, and
+    partitioners."""
     from repro.api import describe_strategies, list_pool_backends
+    from repro.configs import ARCHS
     from repro.scenarios import (get_fleet, get_scenario, list_fleets,
                                  list_partitioners, list_scenarios)
     from repro.serve import get_traffic, list_traffics
     print("benchmarks:")
     for name in BENCHMARKS:
         print(f"  {name}")
+    print("configs (archs):")
+    for name, cfg in ARCHS.items():
+        print(f"  {name} (family={cfg.family}, layers={cfg.n_layers}, "
+              f"d_model={cfg.d_model})")
     print("strategies (plans):")
     for name, d in describe_strategies().items():
         print(f"  {name} (topology={d['topology']}, "

@@ -3,12 +3,12 @@
 #   tier-1 pytest + a quick benchmark smoke through the repro.api engine.
 #
 #   scripts/check.sh          # full suite + table1 + local_phase{,_cnn}
-#                             # + serving + fleet_throughput
+#                             # + serving + fleet_throughput + pool_memory
 #   scripts/check.sh --fast   # CI tier-1 leg: pytest -m "not slow" plus the
 #                             # fig10 sweep + local_phase{,_cnn} + serving +
-#                             # fleet_throughput smokes (dispatch-bound
-#                             # probe, ~1 min each) instead of the ~9 min
-#                             # table1 sweep
+#                             # fleet_throughput + pool_memory smokes
+#                             # (dispatch-bound probe, ~1 min each) instead
+#                             # of the ~9 min table1 sweep
 #
 # The benchmark smoke writes bench_smoke.csv (harness CSV) and
 # bench_smoke.json (per-benchmark us_per_call, diffable against
@@ -19,12 +19,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 PYTEST_ARGS=(-x -q)
-SMOKE=table1_accuracy,local_phase,local_phase_cnn,serving,fleet_throughput
+SMOKE=table1_accuracy,local_phase,local_phase_cnn,serving,fleet_throughput,pool_memory
 FAST=0
 for arg in "$@"; do
   case "$arg" in
     --fast) FAST=1; PYTEST_ARGS+=(-m "not slow")
-            SMOKE=fig10_pool_heatmap,local_phase,local_phase_cnn,serving,fleet_throughput ;;
+            SMOKE=fig10_pool_heatmap,local_phase,local_phase_cnn,serving,fleet_throughput,pool_memory ;;
     *) echo "unknown flag: $arg (expected --fast)" >&2; exit 2 ;;
   esac
 done

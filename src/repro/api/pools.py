@@ -12,6 +12,9 @@ Built-ins:
   every distance measure.
 * ``"moment"``  — ``MomentPool`` running statistics (μ, q); exact for
   squared-L2 only (see DESIGN.md §3).
+* ``"lowrank"`` — ``LowRankDeltaPool`` factor form (base + rank-r deltas,
+  ``FedConfig.pool_rank``); l2/squared_l2 via Gram contractions
+  (see DESIGN.md §13) — the transformer-scale backend.
 """
 from __future__ import annotations
 
@@ -22,8 +25,8 @@ import jax
 
 from repro.api.registry import Registry
 from repro.configs.base import FedConfig
-from repro.core.distances import d1_moment, d1_pool_distance
-from repro.core.pool import ModelPool, MomentPool
+from repro.core.distances import d1_lowrank, d1_moment, d1_pool_distance
+from repro.core.pool import LowRankDeltaPool, ModelPool, MomentPool
 
 PyTree = Any
 
@@ -83,3 +86,10 @@ register_pool_backend(
     create=lambda m0, fed: MomentPool.create(m0),
     d1=lambda params, pool, measure: d1_moment(params, pool),
     supported_measures=("squared_l2",))
+
+register_pool_backend(
+    "lowrank",
+    create=lambda m0, fed: LowRankDeltaPool.create(
+        m0, capacity=fed.pool_size + 1, rank=fed.pool_rank),
+    d1=d1_lowrank,
+    supported_measures=("l2", "squared_l2"))

@@ -243,8 +243,11 @@ def _scanned_local_core(loss_fn: Callable, fed: FedConfig, opt: Optimizer,
     """(m_in, arrays, idx, α, β) → (pool average, pool, (S,) tasks): the
     paper's entire local procedure (Alg. 1 lines 3–17) as a scan over pool
     slots nested around a scan over steps. The pool pytree is the outer
-    carry (fixed-capacity NamedTuple — structure is static), so S × e_local
-    dispatches collapse into one compiled program. α/β ride traced, like
+    carry (fixed-capacity NamedTuple — structure is static; this holds for
+    the factor-form `LowRankDeltaPool` too: its U/V/dense dicts are keyed
+    by static leaf index and the truncated-rank append is QR on fixed
+    shapes, so the same nested scan carries factor pools unchanged), so
+    S × e_local dispatches collapse into one compiled program. α/β ride traced, like
     the batched steps — same bits as the baked constants. Like
     `_scanned_train_core`, `loss_fn` is the probe-resolved step loss —
     conv models scan their fused GEMM twin here."""

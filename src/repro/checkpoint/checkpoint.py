@@ -100,20 +100,26 @@ def latest_fleet_round(ckpt_dir: str,
 
 _KIND_KEY = "__pool_kind__"
 _CAPACITY_KEY = "__capacity__"
+_RANK_KEY = "__rank__"
 
 
 def save_pool(path: str, pool: Any) -> None:
-    from repro.core.pool import ModelPool, MomentPool
+    from repro.core.pool import LowRankDeltaPool, ModelPool, MomentPool
     flat = _flatten(pool)
     if isinstance(pool, ModelPool):
         flat[_KIND_KEY] = np.asarray("stacked")
         flat[_CAPACITY_KEY] = np.asarray(pool.capacity)
     elif isinstance(pool, MomentPool):
         flat[_KIND_KEY] = np.asarray("moment")
+    elif isinstance(pool, LowRankDeltaPool):
+        flat[_KIND_KEY] = np.asarray("lowrank")
+        flat[_CAPACITY_KEY] = np.asarray(pool.capacity)
+        flat[_RANK_KEY] = np.asarray(pool.rank)
     else:
         raise TypeError(
-            f"save_pool expects a ModelPool or MomentPool, got "
-            f"{type(pool).__name__}; bare pytrees go through save_pytree")
+            f"save_pool expects a ModelPool, MomentPool or "
+            f"LowRankDeltaPool, got {type(pool).__name__}; bare pytrees "
+            "go through save_pytree")
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     np.savez(path, **flat)
 
@@ -121,8 +127,9 @@ def save_pool(path: str, pool: Any) -> None:
 def load_pool(path: str, params_like: Any) -> Any:
     """Restore a pool saved by `save_pool`. `params_like` is a single
     model's params pytree (shapes/dtypes only — e.g. `model.init(key)`);
-    the pool structure itself comes from the checkpoint metadata."""
-    from repro.core.pool import ModelPool, MomentPool
+    the pool structure itself comes from the checkpoint metadata (backend
+    kind, stacked capacity, low-rank factor rank)."""
+    from repro.core.pool import LowRankDeltaPool, ModelPool, MomentPool
     with np.load(path) as data:
         flat = dict(data)
     kind = str(flat.pop(_KIND_KEY, ""))
@@ -131,6 +138,10 @@ def load_pool(path: str, params_like: Any) -> Any:
         like = ModelPool.create(params_like, capacity)
     elif kind == "moment":
         like = MomentPool.create(params_like)
+    elif kind == "lowrank":
+        capacity = int(flat.pop(_CAPACITY_KEY))
+        rank = int(flat.pop(_RANK_KEY))
+        like = LowRankDeltaPool.create(params_like, capacity, rank)
     else:
         raise ValueError(
             f"{path} is not a save_pool checkpoint (missing/unknown "

@@ -171,9 +171,12 @@ class FedConfig:
     log_scale_distances: bool = True
     moment_form: bool = False     # legacy alias for pool_backend="moment"
     # Pool representation, resolved against the repro.api backend registry
-    # ("stacked" | "moment" | any registered extension). None derives it
-    # from the legacy `moment_form` flag.
+    # ("stacked" | "moment" | "lowrank" | any registered extension). None
+    # derives it from the legacy `moment_form` flag.
     pool_backend: Optional[str] = None
+    # Rank ceiling for pool_backend="lowrank": each matrix leaf's pool delta
+    # is truncated to rank min(pool_rank, d_in, d_out). Ignored elsewhere.
+    pool_rank: int = 8
     seed: int = 0
 
     def __post_init__(self):
@@ -190,6 +193,15 @@ class FedConfig:
                 f"moment_form=True conflicts with "
                 f"pool_backend={self.pool_backend!r}; drop moment_form and "
                 f"set pool_backend explicitly")
+        if self.pool_rank < 1:
+            raise ValueError(f"pool_rank must be >= 1, got {self.pool_rank}")
+        if self.resolved_pool_backend == "lowrank" and \
+                self.distance_measure not in ("l2", "squared_l2"):
+            raise ValueError(
+                "the low-rank delta pool computes distances from factor "
+                "Grams, which is exact for l2/squared_l2 only; got "
+                f"{self.distance_measure!r}. Use pool_backend='stacked' "
+                "for l1/cosine.")
         if self.resolved_pool_backend == "moment" and \
                 self.distance_measure != "squared_l2":
             raise ValueError(

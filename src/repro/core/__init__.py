@@ -4,14 +4,17 @@ local model-pool diversity enhancement) as a composable JAX module.
 The ``run_*`` drivers here are deprecated wrappers; the engine lives in
 ``repro.api`` (strategy registry + pool backends + LocalTrainer)."""
 from repro.core.baselines import BASELINES
-from repro.core.distances import (d1_moment, d1_pool_distance,
+from repro.core.distances import (d1_lowrank, d1_moment, d1_pool_distance,
                                   d2_anchor_distance, log_scale,
-                                  pairwise_distance)
+                                  lowrank_pairwise_sq, pairwise_distance)
 from repro.core.fedelmy import (fedelmy_loss, run_fedelmy,
                                 run_fedelmy_fewshot, run_fedelmy_pfl)
-from repro.core.pool import ModelPool, MomentPool
+from repro.core.pool import (LowRankDeltaPool, ModelPool, MomentPool,
+                             pool_nbytes)
 
-__all__ = ["BASELINES", "ModelPool", "MomentPool", "run_fedelmy",
+__all__ = ["BASELINES", "ModelPool", "MomentPool", "LowRankDeltaPool",
+           "pool_nbytes", "run_fedelmy",
            "run_fedelmy_fewshot", "run_fedelmy_pfl", "fedelmy_loss",
-           "d1_pool_distance", "d1_moment",
+           "d1_pool_distance", "d1_moment", "d1_lowrank",
+           "lowrank_pairwise_sq",
            "d2_anchor_distance", "pairwise_distance", "log_scale"]

@@ -20,7 +20,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.pool import ModelPool, MomentPool
+from repro.core.pool import (LowRankDeltaPool, ModelPool, MomentPool,
+                             _leaf_key)
 
 F32 = jnp.float32
 PyTree = Any
@@ -83,6 +84,95 @@ def pool_distance_stats_ref(w_flat: jax.Array,
             "l1": jnp.sum(jnp.abs(r), axis=-1),
             "dot": jnp.sum(w_row * m, axis=-1),
             "norm": jnp.sum(m * m, axis=-1)}
+
+
+def lowrank_member_sq(params: PyTree, pool: LowRankDeltaPool) -> jax.Array:
+    """Per-member ||m − m_t||² (C,) in factor form, never densifying a
+    member: with G = m − base and Δ_t = U_tV_tᵀ per matrix leaf,
+
+        ||G − Δ_t||² = ||G||² − 2⟨GᵀU_t, V_t⟩_F + ⟨U_tᵀU_t, V_tᵀV_t⟩_F
+
+    — one (C·r)-wide GEMM against G per matrix leaf plus r×r Grams, so the
+    O(C·d_in·d_out) member materialization the stacked pool pays per step
+    never happens. Dense-delta leaves contribute direct residuals."""
+    base_leaves = jax.tree.leaves(pool.base)
+    p_leaves = jax.tree.leaves(params)
+    c = pool.capacity
+    total = jnp.zeros((c,), F32)
+    for i, (b, p) in enumerate(zip(base_leaves, p_leaves)):
+        k = _leaf_key(i)
+        g = p.astype(F32) - b.astype(F32)
+        if k in pool.dense:
+            r = g[None] - pool.dense[k]
+            total += jnp.sum(jnp.square(r),
+                             axis=tuple(range(1, r.ndim)))
+        else:
+            u, v = pool.u[k], pool.v[k]
+            nd = tuple(range(1, u.ndim))
+            gu = jnp.einsum("...io,c...ir->c...or", g, u)
+            cross = jnp.sum(gu * v, axis=nd)
+            uu = jnp.einsum("c...ir,c...is->c...rs", u, u)
+            vv = jnp.einsum("c...ir,c...is->c...rs", v, v)
+            total += jnp.sum(g * g) - 2.0 * cross + jnp.sum(uu * vv, axis=nd)
+    return jnp.maximum(total, 0.0)
+
+
+def d1_lowrank(params: PyTree, pool: LowRankDeltaPool,
+               measure: str = "l2") -> jax.Array:
+    """Eq. 7 over factor-form members (l2 / squared_l2 — L1 and cosine
+    have no exact Gram form; `backend_for` rejects them up front)."""
+    sq = lowrank_member_sq(params, pool)
+    if measure == "l2":
+        d = jnp.sqrt(sq + 1e-12)
+    elif measure == "squared_l2":
+        d = sq
+    else:
+        raise ValueError(
+            f"lowrank pool supports l2/squared_l2, got {measure!r}")
+    return jnp.sum(d * pool.mask()) / pool.count.astype(F32)
+
+
+def _factor_gram_jnp(a: jax.Array) -> jax.Array:
+    """A @ Aᵀ over the trailing axis in f32, a (…, M, P) → (…, M, M) — the
+    default CPU gram; the canonical kernel oracle is
+    `repro.kernels.ref.factor_gram_ref` (same math)."""
+    af = a.astype(F32)
+    return jnp.einsum("...mp,...np->...mn", af, af)
+
+
+def lowrank_pairwise_sq(pool: LowRankDeltaPool,
+                        gram_fn=_factor_gram_jnp) -> jax.Array:
+    """Pairwise ||m_i − m_j||² (C, C) from r×r Grams — the base cancels
+    (m_i − m_j = Δ_i − Δ_j), so with per-leaf stacked factors
+
+        ⟨Δ_i, Δ_j⟩ = ⟨U_iᵀU_j, V_iᵀV_j⟩_F
+
+    every cross term comes from two long-axis Gram matrices over the
+    (C·r)-row factor stacks — d_in×d_out deltas are never materialized.
+    `gram_fn` computes A (…, M, P) → A@Aᵀ; pass the Pallas kernel wrapper
+    (`repro.kernels.ops.factor_gram`) to run the blocked TPU sweep, or
+    leave the jnp oracle for the CPU reference path."""
+    c = pool.capacity
+    inner = jnp.zeros((c, c), F32)
+    for k, u in pool.u.items():
+        v = pool.v[k]
+        r = u.shape[-1]
+        # (C, *lead, d, r) → (L, C·r, d): the Gram's long axis is d, the
+        # flattened lead dims L ride the kernel's batch grid axis.
+        uf = u.reshape((c, -1) + u.shape[-2:])          # (C, L, d_in, r)
+        vf = v.reshape((c, -1) + v.shape[-2:])          # (C, L, d_out, r)
+        uf = jnp.transpose(uf, (1, 0, 3, 2)).reshape(
+            uf.shape[1], c * r, u.shape[-2])            # (L, C·r, d_in)
+        vf = jnp.transpose(vf, (1, 0, 3, 2)).reshape(
+            vf.shape[1], c * r, v.shape[-2])            # (L, C·r, d_out)
+        gu = gram_fn(uf).reshape(-1, c, r, c, r)
+        gv = gram_fn(vf).reshape(-1, c, r, c, r)
+        inner += jnp.einsum("lirjs,lirjs->ij", gu, gv)
+    for d in pool.dense.values():
+        df = d.reshape(d.shape[0], -1).astype(F32)
+        inner += df @ df.T
+    diag = jnp.diagonal(inner)
+    return jnp.maximum(diag[:, None] + diag[None, :] - 2.0 * inner, 0.0)
 
 
 def d1_moment(params: PyTree, pool: MomentPool) -> jax.Array:

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.kernels.chunk_scan import gla_chunk_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.local_step import conv2d_gemm, maxpool2x2, sgd_update_tree
-from repro.kernels.pool_distance import (distances_from_stats,
+from repro.kernels.pool_distance import (distances_from_stats, factor_gram,
                                          pool_distance_stats)
 
 # Backend probes, resolved lazily ONCE per process (the backend cannot
@@ -69,6 +69,22 @@ def pool_distances(w_flat, pool_flat, *, measure="l2"):
     stats = pool_distance_stats(w_flat, pool_flat, interpret=_interpret())
     w_sq = jnp.sum(jnp.square(w_flat.astype(jnp.float32)), axis=-1)
     return distances_from_stats(stats, w_sq, measure)
+
+
+@jax.jit
+def factor_grams(a):
+    """Blocked A @ Aᵀ ((…, M, P) → (…, M, M)) — the Gram building block of
+    the factor-form pool statistics. Interpret mode off-TPU like every
+    kernel wrapper."""
+    return factor_gram(a, interpret=_interpret())
+
+
+def lowrank_pool_sq(pool):
+    """Pairwise ||m_i − m_j||² (C, C) of a `LowRankDeltaPool` through the
+    blocked Gram kernel: the pool-diversity diagnostic at transformer
+    scale, never materializing a d_in×d_out member delta."""
+    from repro.core.distances import lowrank_pairwise_sq
+    return lowrank_pairwise_sq(pool, gram_fn=factor_grams)
 
 
 def tree_pool_distances(params, pool_members, *, measure="l2"):

@@ -100,6 +100,60 @@ def _pool_distance_stats_batched(w_flat, pool_flat, *, block_p=BLOCK_P,
     return {"sq": sq, "l1": l1, "dot": dot, "norm": norm}
 
 
+# -- factor-form pool statistics (LowRankDeltaPool, DESIGN.md §13) ----------
+#
+# Pairwise member distances in factor form reduce to Gram matrices over the
+# stacked factors: with rows A = [U_1ᵀ; …; U_Cᵀ] (C·r rows, d columns),
+# ⟨Δ_i, Δ_j⟩ = ⟨U_iᵀU_j, V_iᵀV_j⟩_F reads off two A@Aᵀ products — r×r blocks
+# of a (C·r)×(C·r) Gram — so ‖U_iV_iᵀ − U_jV_jᵀ‖² never materializes a
+# d_in×d_out delta. The kernel below is that A@Aᵀ, blocked over the long
+# parameter axis d like the stats sweep above; the M = C·r axis is tiny
+# (pool capacity × rank), so the whole (M, M) accumulator tile stays
+# resident in VMEM across the sweep.
+
+BLOCK_P_GRAM = 2048      # (M, BP) f32 tile: M ≤ 256 → ≤ 2 MiB VMEM
+
+
+def _gram_kernel(a_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = a_ref[0].astype(jnp.float32)              # (M, BP)
+    out_ref[0] += jax.lax.dot_general(
+        a, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def factor_gram(a, *, block_p=BLOCK_P_GRAM, interpret=False):
+    """Blocked A @ Aᵀ over the trailing axis, f32 accumulation:
+
+    * a (M, P)    → (M, M)
+    * a (B, M, P) → (B, M, M) — B independent Grams (one per lead slice of
+      a stacked transformer leaf) in one grid sweep.
+
+    Oracle: `repro.kernels.ref.factor_gram_ref`."""
+    if a.ndim == 2:
+        return factor_gram(a[None], block_p=block_p, interpret=interpret)[0]
+    b, m, p = a.shape
+    pad = (-p) % block_p
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+    n_blocks = (p + pad) // block_p
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(b, n_blocks),
+        in_specs=[pl.BlockSpec((1, m, block_p), lambda i, j: (i, 0, j))],
+        out_specs=pl.BlockSpec((1, m, m), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m, m), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(a)
+
+
 def distances_from_stats(stats, w_sq_norm, measure: str):
     """Per-member distances from fused stats. w_sq_norm = Σ w² — scalar for
     (C,) stats, (B,) for batched (B, C) stats."""

@@ -40,6 +40,14 @@ def pool_distance_ref(w_flat, pool_flat):
             "norm": jnp.sum(m * m, axis=1)}
 
 
+def factor_gram_ref(a):
+    """f32 A @ Aᵀ over the trailing axis — oracle for
+    `pool_distance.factor_gram` ((…, M, P) → (…, M, M)), the Gram building
+    block of the factor-form pool statistics (DESIGN.md §13)."""
+    af = a.astype(jnp.float32)
+    return jnp.einsum("...mp,...np->...mn", af, af)
+
+
 def matmul_ref(a, b):
     """f32 GEMM ground truth for `local_step.matmul_blocked`."""
     return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -74,10 +74,8 @@ def make_eval(model, cfg, test_batch):
             return jnp.mean(jnp.argmax(logits, -1) == test_batch["labels"])
         return acc
 
-    @jax.jit
-    def nll(params):
-        return -model.loss_fn(params, test_batch)   # higher is better
-    return nll
+    from repro.models.transformer import lm_eval_fn
+    return lm_eval_fn(model, test_batch)            # higher is better
 
 
 def main():
@@ -100,6 +98,12 @@ def main():
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale arch variant")
     ap.add_argument("--moment-form", action="store_true")
+    ap.add_argument("--pool-backend", default=None,
+                    help="pool representation: stacked | moment | lowrank "
+                         "(default stacked; lowrank is the "
+                         "transformer-scale factor pool)")
+    ap.add_argument("--pool-rank", type=int, default=8,
+                    help="rank ceiling for --pool-backend lowrank")
     ap.add_argument("--distribution", default="label-skew",
                     choices=["label-skew", "domain-shift"])
     ap.add_argument("--dirichlet-beta", type=float, default=0.5)
@@ -113,12 +117,14 @@ def main():
     model = build_model(cfg)
     iters, test_batch = build_clients(args, cfg)
     eval_fn = make_eval(model, cfg, test_batch)
+    backend = args.pool_backend or (
+        "moment" if args.moment_form else "stacked")
     fed = FedConfig(n_clients=args.clients, pool_size=args.pool,
                     e_local=args.e_local, e_warmup=args.e_warmup,
                     alpha=args.alpha, beta=args.beta,
                     learning_rate=args.lr,
-                    pool_backend="moment" if args.moment_form else "stacked",
-                    distance_measure=("squared_l2" if args.moment_form
+                    pool_backend=backend, pool_rank=args.pool_rank,
+                    distance_measure=("squared_l2" if backend == "moment"
                                       else "l2"),
                     seed=args.seed)
 

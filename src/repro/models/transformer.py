@@ -56,6 +56,20 @@ class Model(NamedTuple):
     init_cache: Optional[Callable]       # (batch, seq_len, dtype) -> cache pytree
 
 
+def lm_eval_fn(model: "Model", test_batch: Dict[str, jax.Array]) -> Callable:
+    """Held-out eval for an LM client: jitted mean negative NLL over a fixed
+    {tokens, labels} batch (higher is better, matching the accuracy-style
+    `Experiment.eval_fn` contract). This is the FL-engine hook that lets
+    any `build_model` language model ride the same Experiment/serving
+    paths as the paper CNN (DESIGN.md §13 transformer-client quickstart)."""
+    batch = {k: jnp.asarray(v) for k, v in test_batch.items()}
+
+    @jax.jit
+    def nll(params):
+        return -model.loss_fn(params, batch)
+    return nll
+
+
 def _dtype(cfg):
     return jnp.dtype(cfg.param_dtype)
 

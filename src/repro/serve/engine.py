@@ -26,7 +26,10 @@ request latency. The server compiles ONE scoring program:
 Pool-backend note: a `ModelPool` serves all live members; a `MomentPool`
 only materializes its running mean (members are not retained by
 construction), so its "ensemble" is the single averaged model — same
-scoring path, P = 1.
+scoring path, P = 1. A `LowRankDeltaPool` densifies base + U_tV_tᵀ once
+at server build (`materialize_members`) — scoring vmaps forwards over
+stacked members, so serving memory is C·M even when training memory was
+factor-form (DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -36,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pool import ModelPool, MomentPool
+from repro.core.pool import LowRankDeltaPool, ModelPool, MomentPool
 
 PyTree = Any
 F32 = jnp.float32
@@ -119,15 +122,20 @@ class PoolServer:
 
     @classmethod
     def from_pool(cls, model, pool, **kw) -> "PoolServer":
-        """Serve a trained pool: every live `ModelPool` member, or the
-        moment-form running mean (P = 1; see module docstring)."""
+        """Serve a trained pool: every live `ModelPool` member, every
+        reconstructed `LowRankDeltaPool` member (base + U_tV_tᵀ, densified
+        once here), or the moment-form running mean (P = 1; see module
+        docstring)."""
         if isinstance(pool, ModelPool):
             return cls(model, pool.members, pool.mask(), **kw)
+        if isinstance(pool, LowRankDeltaPool):
+            return cls(model, pool.materialize_members(), pool.mask(), **kw)
         if isinstance(pool, MomentPool):
             return cls.from_params(model, pool.average(), **kw)
         raise TypeError(
-            f"expected a ModelPool or MomentPool, got {type(pool).__name__}; "
-            "for a bare params pytree use PoolServer.from_params")
+            f"expected a ModelPool, LowRankDeltaPool or MomentPool, got "
+            f"{type(pool).__name__}; for a bare params pytree use "
+            "PoolServer.from_params")
 
     @classmethod
     def from_params(cls, model, params: PyTree, **kw) -> "PoolServer":

@@ -90,7 +90,7 @@ def test_unknown_strategy_lists_registered():
 
 
 def test_pool_backend_roundtrip():
-    assert {"stacked", "moment"} <= set(list_pool_backends())
+    assert {"stacked", "moment", "lowrank"} <= set(list_pool_backends())
     for name in list_pool_backends():
         assert get_pool_backend(name).name == name
     with pytest.raises(ValueError, match="stacked"):
@@ -167,6 +167,25 @@ def test_moment_backend_matches_stacked_squared_l2(n, seed):
     # the registered moment d1 is the RMS of the same statistic
     np.testing.assert_allclose(float(moment.d1(live, mpool, "squared_l2")),
                                np.sqrt(via_stack + 1e-12), rtol=1e-4)
+
+
+@given(k=st.integers(1, 6), seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_moment_and_stacked_average_agree_after_k_appends(k, seed):
+    """Property: the moment pool's left-fold incremental mean μ ← (n·μ+w)/(n+1)
+    and the stacked pool's masked mean agree on ``average()`` after any k
+    appends in any order — to rounding tolerance, not bitwise (the float
+    association differs; see MomentPool.append's docstring)."""
+    ps = [_params(jax.random.fold_in(KEY, 300 + seed * 16 + i))
+          for i in range(k + 1)]
+    spool = ModelPool.create(ps[0], capacity=k + 1)
+    mpool = MomentPool.create(ps[0])
+    for p in ps[1:]:
+        spool, mpool = spool.append(p), mpool.append(p)
+    for a, b in zip(jax.tree.leaves(spool.average()),
+                    jax.tree.leaves(mpool.average())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
 
 
 def test_moment_backend_d1_is_exact_rms():

@@ -1,0 +1,495 @@
+"""Tests for the low-rank delta pool (`LowRankDeltaPool`, DESIGN.md §13).
+
+Five groups:
+
+1. *Pool mechanics* — create/append/mask/average/first/member/
+   materialize_members semantics; the FACTOR_MIN split between factored
+   matrix leaves and dense-delta leaves; full-rank appends reconstruct
+   members exactly (the range-finder projection is the identity when
+   r = min(d_in, d_out)).
+2. *Factor-form statistics vs the dense oracle* — hypothesis property
+   tests: the blocked Gram kernel (interpret mode) against
+   `kernels.ref.factor_gram_ref`; `lowrank_pairwise_sq` (jnp and kernel
+   gram paths) and `d1_lowrank` against the same quantities computed on
+   the densified member stack through the stacked-pool reference path.
+3. *Engine equivalence at full rank* — fedelmy with `"lowrank"` at full
+   per-leaf rank matches `"stacked"` (sequential and batched) to float
+   tolerance: the two step programs do the same math through different
+   associations (QR projection vs raw member storage), so the pinned
+   bound is ~1e-5 relative, NOT bitwise.
+4. *Serving + checkpoint contracts* — `PoolServer.from_pool` on a factor
+   pool scores bit-identically to a server built from the densified
+   member stack; `save_pool`/`load_pool` round-trips every factor leaf
+   bit-exactly (incl. the per-leaf rank clipping metadata).
+5. *Config validation* — `FedConfig` rejects lowrank with measures that
+   have no Gram form, and non-positive ranks.
+"""
+import dataclasses
+import itertools
+from collections import namedtuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.api import BatchAxes, Experiment, run, run_batch
+from repro.checkpoint import load_pool, save_pool
+from repro.configs import FedConfig
+from repro.core.distances import (d1_lowrank, d1_pool_distance,
+                                  lowrank_member_sq, lowrank_pairwise_sq)
+from repro.core.pool import (FACTOR_MIN, LowRankDeltaPool, ModelPool,
+                             pool_nbytes)
+from repro.kernels.ops import factor_grams, lowrank_pool_sq
+from repro.kernels.ref import factor_gram_ref
+from repro.serve import PoolServer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _params(key, scale=1.0):
+    """A pytree exercising every leaf class: a plain matrix, a stacked
+    (lead-dim) matrix batch, a matrix too small to factor (min dim <
+    FACTOR_MIN), and a vector."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"w1": scale * jax.random.normal(k1, (12, 9)),
+            "w2": scale * jax.random.normal(k2, (3, 10, 8)),
+            "small": scale * jax.random.normal(k3, (4, 5)),
+            "b": scale * jax.random.normal(k4, (7,))}
+
+
+# Exact reconstruction needs r >= min(d_in, d_out) on EVERY factored leaf;
+# create() clips per leaf, so 9 is full rank for w1 (-> 9) and w2 (-> 8).
+FULL_RANK = 9
+
+
+def _dense_twin(pool: LowRankDeltaPool) -> ModelPool:
+    """The stacked pool holding exactly the factor pool's reconstructed
+    members — the oracle for every distance comparison."""
+    return ModelPool(pool.materialize_members(), pool.count)
+
+
+def _fill(key, k, rank, capacity=None):
+    """A factor pool and its appended params: seed + k appends."""
+    base = _params(jax.random.fold_in(key, 0))
+    pool = LowRankDeltaPool.create(base, capacity=(capacity or k + 1),
+                                   rank=rank)
+    appended = [_params(jax.random.fold_in(key, i + 1)) for i in range(k)]
+    for p in appended:
+        pool = pool.append(p)
+    return base, pool, appended
+
+
+# ---------------------------------------------------------------------------
+# 1. Pool mechanics
+# ---------------------------------------------------------------------------
+
+def test_create_splits_leaves_by_factor_min():
+    base = _params(KEY)
+    pool = LowRankDeltaPool.create(base, capacity=3, rank=4)
+    # w1 (12,9) and w2 (3,10,8) factor; small (4,5) and b (7,) stay dense
+    assert len(pool.u) == 2 and len(pool.v) == 2 and len(pool.dense) == 2
+    assert pool.capacity == 3
+    assert pool.rank == 4
+    assert int(pool.count) == 1
+    assert min((4, 5)[-2:]) < FACTOR_MIN      # the split's witness
+    # lead dims ride the factor shapes: w2 u is (C, 3, 10, r)
+    w2_key = [k for k, u in pool.u.items() if u.shape[1:3] == (3, 10)]
+    assert len(w2_key) == 1
+
+
+def test_rank_clips_per_leaf():
+    base = _params(KEY)
+    pool = LowRankDeltaPool.create(base, capacity=2, rank=64)
+    # per-leaf rank = min(64, d_in, d_out): 9 for w1, 8 for w2
+    assert sorted(u.shape[-1] for u in pool.u.values()) == [8, 9]
+    assert pool.rank == 9                     # the max — what save_pool pins
+
+
+def test_first_is_base_and_member0_reconstructs_it():
+    base, pool, _ = _fill(KEY, k=2, rank=4)
+    for a, b in zip(jax.tree.leaves(pool.first()), jax.tree.leaves(base)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(pool.member(0)), jax.tree.leaves(base)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_mask_and_count_track_appends():
+    _, pool, _ = _fill(KEY, k=2, rank=4, capacity=5)
+    assert int(pool.count) == 3
+    np.testing.assert_array_equal(np.asarray(pool.mask()),
+                                  [1.0, 1.0, 1.0, 0.0, 0.0])
+
+
+@given(k=st.integers(1, 3), seed=st.integers(0, 8))
+@settings(max_examples=15, deadline=None)
+def test_full_rank_member_reconstruction_is_exact(k, seed):
+    """At r = min(d_in, d_out) the range-finder projection QQᵀΔ = Δ, so
+    member(t) reproduces the appended params to float rounding (f32 QR
+    round-trip error ~1e-5·||Δ|| — a rank truncation would miss by O(1))."""
+    key = jax.random.fold_in(KEY, 100 + seed)
+    _, pool, appended = _fill(key, k=k, rank=FULL_RANK)
+    for t, p in enumerate(appended, start=1):
+        for a, b in zip(jax.tree.leaves(pool.member(t)),
+                        jax.tree.leaves(p)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+
+
+@given(k=st.integers(1, 3), seed=st.integers(0, 8))
+@settings(max_examples=15, deadline=None)
+def test_average_matches_materialized_member_mean(k, seed):
+    """average() == masked mean of materialize_members() — the lazy
+    reconstruction and the stacked mean are the same linear map."""
+    key = jax.random.fold_in(KEY, 200 + seed)
+    _, pool, _ = _fill(key, k=k, rank=3, capacity=k + 2)
+    twin = _dense_twin(pool)
+    for a, b in zip(jax.tree.leaves(pool.average()),
+                    jax.tree.leaves(twin.average())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_append_is_vmappable():
+    """Batched pools (run_batch's vmapped interpreters) append through the
+    same traced code path — structure is static, shapes fixed."""
+    base = _params(KEY)
+    pool = LowRankDeltaPool.create(base, capacity=3, rank=4)
+    bpool = jax.tree.map(lambda x: jnp.stack([x, x]), pool)
+    p = _params(jax.random.fold_in(KEY, 1))
+    bp = jax.tree.map(lambda x: jnp.stack([x, x]), p)
+    out = jax.vmap(LowRankDeltaPool.append)(bpool, bp)
+    ref = pool.append(p)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a)[0], np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_factor_pool_is_smaller_than_stacked():
+    """The headline: at low rank the factor pool undercuts the stacked
+    pool's (S+1)·M bytes (the ≥4× transformer-scale acceptance lives in
+    benchmarks/pool_memory.py; this pins the direction at unit scale)."""
+    base = jax.tree.map(lambda x: x, {"w": jnp.zeros((512, 256)),
+                                      "b": jnp.zeros((256,))})
+    dense = ModelPool.create(base, capacity=6)
+    low = LowRankDeltaPool.create(base, capacity=6, rank=8)
+    assert pool_nbytes(low) * 4 < pool_nbytes(dense)
+
+
+# ---------------------------------------------------------------------------
+# 2. Factor-form statistics vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(2, 6), p=st.integers(1, 40), b=st.integers(0, 3),
+       seed=st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_factor_gram_kernel_matches_ref(m, p, b, seed):
+    """The blocked Pallas Gram (interpret mode off-TPU) against the jnp
+    oracle, single and batched, including ragged P (block zero-padding).
+    Tolerance is relative: the kernel accumulates in P-blocks, so long
+    dot products reassociate."""
+    key = jax.random.fold_in(KEY, 300 + seed)
+    shape = (m, p) if b == 0 else (b, m, p)
+    a = jax.random.normal(key, shape)
+    got = np.asarray(factor_grams(a))
+    want = np.asarray(factor_gram_ref(a))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def _oracle_pairwise_sq(pool: LowRankDeltaPool) -> np.ndarray:
+    members = pool.materialize_members()
+    flat = jnp.concatenate(
+        [x.reshape(x.shape[0], -1).astype(jnp.float32)
+         for x in jax.tree.leaves(members)], axis=1)
+    diff = flat[:, None, :] - flat[None, :, :]
+    return np.asarray(jnp.sum(diff * diff, axis=-1))
+
+
+@given(k=st.integers(1, 3), rank=st.integers(1, FULL_RANK),
+       seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_pairwise_sq_matches_materialized_oracle(k, rank, seed):
+    """lowrank_pairwise_sq — the Gram-trick pairwise distances — equals
+    pairwise ||m_i − m_j||² over the densified members, at ANY rank (the
+    factors define the members, so truncation cannot open a gap), through
+    both gram paths: the jnp default and the Pallas kernel wrapper."""
+    key = jax.random.fold_in(KEY, 400 + seed)
+    _, pool, _ = _fill(key, k=k, rank=rank, capacity=k + 2)
+    want = _oracle_pairwise_sq(pool)
+    got_jnp = np.asarray(lowrank_pairwise_sq(pool))
+    got_kernel = np.asarray(lowrank_pool_sq(pool))
+    np.testing.assert_allclose(got_jnp, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_kernel, want, rtol=1e-4, atol=1e-4)
+
+
+@given(k=st.integers(1, 3), rank=st.integers(1, FULL_RANK),
+       seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_d1_lowrank_matches_stacked_reference(k, rank, seed):
+    """d1 in factor form — ||G||² − 2⟨GᵀU,V⟩ + ⟨UᵀU,VᵀV⟩ per member —
+    equals d1_pool_distance over the densified member stack, l2 and
+    squared_l2, at any rank."""
+    key = jax.random.fold_in(KEY, 500 + seed)
+    _, pool, _ = _fill(key, k=k, rank=rank, capacity=k + 2)
+    w = _params(jax.random.fold_in(key, 99), scale=0.5)
+    twin = _dense_twin(pool)
+    for measure in ("l2", "squared_l2"):
+        got = float(d1_lowrank(w, pool, measure))
+        want = float(d1_pool_distance(w, twin, measure))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_member_sq_is_nonnegative_and_zero_on_base():
+    base, pool, _ = _fill(KEY, k=2, rank=2)
+    sq = np.asarray(lowrank_member_sq(base, pool))
+    assert (sq >= 0).all()
+    np.testing.assert_allclose(sq[0], 0.0, atol=1e-5)   # member 0 IS base
+
+
+def test_d1_lowrank_rejects_measures_without_gram_form():
+    _, pool, _ = _fill(KEY, k=1, rank=2)
+    with pytest.raises(ValueError, match="l2/squared_l2"):
+        d1_lowrank(_params(KEY), pool, "l1")
+
+
+# ---------------------------------------------------------------------------
+# 3. Engine equivalence at full rank (sequential and batched)
+# ---------------------------------------------------------------------------
+
+TinyModel = namedtuple("TinyModel", "init loss_fn forward")
+
+
+def _probe_model():
+    """A linear probe whose weight matrix is big enough to factor
+    ((16, 12): full per-leaf rank 12)."""
+    def init(key):
+        k1, _ = jax.random.split(key)
+        return {"w": 0.1 * jax.random.normal(k1, (16, 12)),
+                "b": jnp.zeros((12,))}
+
+    def loss_fn(params, batch):
+        logits = batch["x"] @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(batch["y"], 12)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+    def forward(params, batch):
+        return batch["x"] @ params["w"] + params["b"]
+
+    return TinyModel(init, loss_fn, forward)
+
+
+def _probe_iter(seed):
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (8, 16))
+    y = jnp.arange(8) % 4
+    return itertools.cycle([{"x": x, "y": y}])
+
+
+def _probe_iters(seed=0):
+    return [_probe_iter(0), _probe_iter(1)]
+
+
+STACKED_FED = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                        learning_rate=1e-2)
+LOWRANK_FED = dataclasses.replace(STACKED_FED, pool_backend="lowrank",
+                                  pool_rank=12)   # full rank for (16, 12)
+
+
+def _assert_trees_close(a, b, rtol=1e-5, atol=1e-6, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=rtol, atol=atol, err_msg=msg)
+
+
+def test_fedelmy_lowrank_full_rank_matches_stacked_sequential():
+    """The engine-level acceptance: at full rank every append round-trips
+    the trained member exactly (mod float), so the whole fedelmy chain —
+    d1/d2-regularized local steps, Eq. 5/6 handoffs, final aggregate —
+    lands on the stacked backend's result to ~1e-5. Observed max |Δ| on
+    this probe is ~6e-8; the pinned bound leaves float headroom, bitwise
+    equality is NOT expected (QR projection reassociates the math)."""
+    model = _probe_model()
+    seq = run(Experiment(model=model, client_iters=_probe_iters(),
+                         fed=STACKED_FED, strategy="fedelmy", key=KEY))
+    low = run(Experiment(model=model, client_iters=_probe_iters(),
+                         fed=LOWRANK_FED, strategy="fedelmy", key=KEY))
+    _assert_trees_close(seq.params, low.params)
+    # the factor pool's reconstructed members match the stacked pool's
+    _assert_trees_close(seq.final_pool.members,
+                        low.final_pool.materialize_members())
+    assert isinstance(low.final_pool, LowRankDeltaPool)
+
+
+def test_fedelmy_lowrank_batched_matches_sequential():
+    """run_batch's vmapped interpreter carries the factor pool through
+    the same nested scans — a seed sweep matches sequential lowrank runs
+    (same tolerance story as above: observed ~4e-8, pinned at 1e-5)."""
+    model = _probe_model()
+    seeds = [0, 1]
+    seq = [run(Experiment(model=model, client_iters=_probe_iters(),
+                          fed=LOWRANK_FED, strategy="fedelmy",
+                          key=jax.random.PRNGKey(s)))
+           for s in seeds]
+    batch = run_batch(
+        Experiment(model=model, client_iters=_probe_iters(),
+                   fed=LOWRANK_FED, strategy="fedelmy"),
+        axes=BatchAxes(seeds=seeds, client_iters_for_seed=_probe_iters))
+    assert batch.n_compiled_groups == 1
+    for s, b in zip(seq, batch):
+        _assert_trees_close(s.params, b.params)
+
+
+# ---------------------------------------------------------------------------
+# 4. Serving + checkpoint contracts
+# ---------------------------------------------------------------------------
+
+def _trained_lowrank_pool(model):
+    res = run(Experiment(model=model, client_iters=_probe_iters(),
+                         fed=LOWRANK_FED, strategy="fedelmy", key=KEY))
+    return res.require_final_pool()
+
+
+def test_pool_server_from_lowrank_pool_scores_like_dense_members():
+    """from_pool densifies ONCE at server build; scoring is then the
+    stacked-member path verbatim, so the two servers are bit-identical."""
+    model = _probe_model()
+    pool = _trained_lowrank_pool(model)
+    srv = PoolServer.from_pool(model, pool)
+    ref = PoolServer(model, pool.materialize_members(), pool.mask())
+    assert srv.n_members == int(pool.count)
+    batch = next(_probe_iter(7))
+    s1, p1 = srv.score_batch(batch)
+    s2, p2 = ref.score_batch(batch)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_lowrank_checkpoint_roundtrip_bit_exact(tmp_path):
+    """save_pool → load_pool restores every factor leaf bit-for-bit: the
+    npz container stores the factors themselves (no re-projection), and
+    the saved max rank rebuilds every per-leaf clipped rank (min(max,
+    d_in, d_out) is reproducible from shapes alone)."""
+    model = _probe_model()
+    pool = _trained_lowrank_pool(model)
+    path = str(tmp_path / "pool.npz")
+    save_pool(path, pool)
+    loaded = load_pool(path, model.init(KEY))
+    assert isinstance(loaded, LowRankDeltaPool)
+    assert loaded.capacity == pool.capacity
+    assert loaded.rank == pool.rank
+    for a, b in zip(jax.tree.leaves(pool), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # train → save → load → serve == train → serve, bit-identical
+    batch = next(_probe_iter(7))
+    s1, _ = PoolServer.from_pool(model, pool).score_batch(batch)
+    s2, _ = PoolServer.from_checkpoint(model, path,
+                                       model.init(KEY)).score_batch(batch)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_checkpoint_roundtrip_with_mixed_leaf_ranks(tmp_path):
+    """Rank clipping survives the round-trip even when leaves clip to
+    different ranks (w1 → 9, w2 → 8 under rank=64)."""
+    _, pool, _ = _fill(KEY, k=2, rank=64)
+    path = str(tmp_path / "pool.npz")
+    save_pool(path, pool)
+    loaded = load_pool(path, pool.base)
+    assert sorted(u.shape[-1] for u in loaded.u.values()) == [8, 9]
+    for a, b in zip(jax.tree.leaves(pool), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# 5. Transformer client end-to-end (the backend's raison d'être)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_transformer_lowrank_fedelmy_end_to_end(tmp_path):
+    """The first large-model client through the full system: reduced
+    llama3.2-1b trains a factor-form FedELMY chain through the scanned
+    StrategyPlan local phase (DataPlans), serves the trained pool, survives
+    a checkpoint round-trip bit-exactly, and runs the shard_map fleet path
+    — the DESIGN.md §13 transformer-client quickstart, as a test."""
+    from repro.api import launch
+    from repro.configs import get_arch
+    from repro.data import DataPlan, make_lm_dataset
+    from repro.launch.mesh import make_cohort_mesh
+    from repro.models import build_model
+    from repro.models.transformer import lm_eval_fn
+
+    cfg = get_arch("llama3.2-1b").reduced()
+    model = build_model(cfg)
+    doms = make_lm_dataset(n_seqs=64, seq_len=32, vocab=cfg.vocab_size,
+                           n_domains=2, seed=0)
+
+    def plans(seed=0):
+        return [DataPlan({"tokens": d.tokens[:, :-1],
+                          "labels": d.tokens[:, 1:]}, 8, seed=seed + i)
+                for i, d in enumerate(doms)]
+
+    test_batch = {"tokens": doms[0].tokens[:8, :-1],
+                  "labels": doms[0].tokens[:8, 1:]}
+    fed = FedConfig(n_clients=2, pool_size=2, e_local=3, e_warmup=2,
+                    learning_rate=1e-3, pool_backend="lowrank", pool_rank=4)
+
+    res = run(Experiment(model=model, client_iters=plans(), fed=fed,
+                         strategy="fedelmy", key=KEY,
+                         eval_fn=lm_eval_fn(model, test_batch)))
+    assert np.isfinite(res.final_metric)
+    assert all(bool(jnp.isfinite(x).all())
+               for x in jax.tree.leaves(res.params))
+    pool = res.require_final_pool()
+    assert isinstance(pool, LowRankDeltaPool)
+    assert int(pool.count) == fed.pool_size + 1
+
+    # serving: ensemble LM logits over the reconstructed members
+    srv = PoolServer.from_pool(model, pool)
+    scores, preds = srv.score_batch({"tokens": test_batch["tokens"]})
+    assert scores.shape[-1] == cfg.vocab_size
+    assert bool(jnp.isfinite(scores).all())
+    assert preds.shape == test_batch["tokens"].shape
+
+    # checkpoint: factor leaves round-trip bit-exactly at transformer scale
+    path = str(tmp_path / "tf_pool.npz")
+    save_pool(path, pool)
+    loaded = load_pool(path, model.init(KEY))
+    for a, b in zip(jax.tree.leaves(pool), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # fleet path: the factor pool rides shard_map's flattened run×client
+    # axis (1-device CPU mesh — placement degenerates, the path must hold)
+    batch = launch(Experiment(model=model, client_iters=plans(), fed=fed,
+                              strategy="fedelmy_pfl"),
+                   axes=BatchAxes(seeds=[0], client_iters_for_seed=plans),
+                   mesh=make_cohort_mesh(2))
+    assert all(bool(jnp.isfinite(x).all())
+               for r in batch for x in jax.tree.leaves(r.params))
+
+
+# ---------------------------------------------------------------------------
+# 6. Config validation
+# ---------------------------------------------------------------------------
+
+def test_fedconfig_rejects_lowrank_without_gram_measure():
+    for measure in ("l1", "cosine"):
+        with pytest.raises(ValueError, match="factor Gram"):
+            dataclasses.replace(STACKED_FED, pool_backend="lowrank",
+                                distance_measure=measure)
+
+
+def test_fedconfig_rejects_nonpositive_rank():
+    with pytest.raises(ValueError, match="pool_rank"):
+        dataclasses.replace(STACKED_FED, pool_rank=0)
+
+
+def test_fedconfig_lowrank_accepts_both_gram_measures():
+    for measure in ("l2", "squared_l2"):
+        fed = dataclasses.replace(STACKED_FED, pool_backend="lowrank",
+                                  distance_measure=measure)
+        assert fed.resolved_pool_backend == "lowrank"
