@@ -149,6 +149,20 @@ def probe_mlp_model(width=64):
         x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
         return x @ params["fc2"]["w"] + params["fc2"]["b"]
 
+    def forward_factored(params, deltas, batch):
+        # Factored-serving hook (models/factored.py): fc1 runs the SHARED
+        # BGMV form — pooled features are member-independent, so the base
+        # GEMM and the x@U contraction read x once for all S members.
+        from repro.models.factored import fdense
+        x = pool_feats(batch["images"])                  # (B, 192) shared
+        h = jax.nn.relu(fdense(x, params["fc1"]["w"], deltas["fc1"]["w"],
+                               params["fc1"]["b"], deltas["fc1"]["b"]))
+        return fdense(h, params["fc2"]["w"], deltas["fc2"]["w"],
+                      params["fc2"]["b"], deltas["fc2"]["b"])
+
+    from repro.models.factored import FACTORED_FORWARD_ATTR
+    setattr(forward, FACTORED_FORWARD_ATTR, forward_factored)
+
     def loss_fn(params, batch):
         logits = forward(params, batch)
         lse = jax.nn.logsumexp(logits, axis=-1)

@@ -1,7 +1,9 @@
 """Roofline benchmark: aggregates the dry-run JSONs (launch/dryrun.py must
 have run) into the EXPERIMENTS.md §Roofline table — one row per
 (arch × shape × mesh) with the three terms, dominant bottleneck, and
-MODEL_FLOPS/HLO_FLOPs useful-compute ratio."""
+MODEL_FLOPS/HLO_FLOPs useful-compute ratio — plus the static per-tile
+kernel arithmetic-intensity table (GEMM / flash-attention / BGMV) from
+`analysis.roofline.kernel_intensities`."""
 from __future__ import annotations
 
 import glob
@@ -10,6 +12,7 @@ import os
 import time
 
 from benchmarks.common import emit_csv, save_result
+from repro.analysis.roofline import kernel_intensities
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
@@ -44,9 +47,17 @@ def run():
               f"C={rl['compute_s']:.2e} M={rl['memory_s']:.2e} "
               f"X={rl['collective_s']:.2e} "
               f"useful={r.get('useful_flops_ratio', 0):.2f}", flush=True)
-    save_result("roofline_report", rows)
+    kernels = kernel_intensities()
+    for k in kernels:
+        print(f"  kernel {k['kernel']:16s} [{k['note']}] "
+              f"flops/tile={k['tile_flops']:.3g} "
+              f"bytes/tile={k['tile_bytes']:.3g} "
+              f"intensity={k['intensity']:.1f} "
+              f"(ridge {k['ridge']:.1f}) -> {k['bound']}-bound", flush=True)
+    save_result("roofline_report", {"runs": rows, "kernels": kernels})
     emit_csv("roofline_report", t0,
-             f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}")
+             f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)};"
+             f"kernels={len(kernels)}")
     if errors:
         for e in errors:
             print(f"  ERROR {e['arch']} {e['shape']} {e['mesh']}: "

@@ -10,6 +10,13 @@ Two thresholds:
   baseline × hard threshold. A >2× regression is beyond host jitter on
   the dispatch-bound smoke benchmarks; CI treats it as a broken hot path.
 
+Besides ``us_per_call``, the gate also rides the derived ``k=v;k=v``
+metric strings: every key ending in ``_ms`` (latency — ratio new/base)
+or ``_qps`` (throughput — ratio inverted, base/new, so higher is still
+worse) that appears in BOTH baseline and report is compared at the same
+thresholds. That is how the factored-serving numbers (tf_qps,
+tf_dense_qps, tf_p50_ms, …) are guarded without a bespoke gate.
+
 Missing files never fail (fresh checkouts have no report to compare).
 
   python scripts/bench_compare.py BENCH_baseline.json bench_smoke.json
@@ -32,11 +39,37 @@ def load(path: str) -> dict:
     return data.get("benchmarks", data)
 
 
+def derived_metrics(entry: dict) -> dict:
+    """Gateable floats from a benchmark's derived ``k=v;k=v`` string:
+    keys ending in ``_ms`` (latency) or ``_qps`` (throughput)."""
+    out = {}
+    for part in entry.get("derived", "").split(";"):
+        key, sep, val = part.partition("=")
+        if not sep or not (key.endswith("_ms") or key.endswith("_qps")):
+            continue
+        try:
+            out[key] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
 def compare(baseline: dict, new: dict, threshold: float,
             hard_threshold: float) -> tuple:
     """Returns (n_warnings, n_failures) over the union of benchmarks."""
     warnings = failures = 0
-    print(f"{'benchmark':30s} {'baseline_us':>14s} {'new_us':>14s} "
+
+    def judge(ratio: float) -> str:
+        nonlocal warnings, failures
+        if ratio > hard_threshold:
+            failures += 1
+            return f"  FAIL >{hard_threshold:g}x baseline"
+        if ratio > threshold:
+            warnings += 1
+            return f"  WARN >{threshold:g}x baseline"
+        return ""
+
+    print(f"{'benchmark':30s} {'baseline':>14s} {'new':>14s} "
           f"{'ratio':>7s}")
     for name in sorted(set(baseline) | set(new)):
         b = baseline.get(name, {}).get("us_per_call")
@@ -46,14 +79,19 @@ def compare(baseline: dict, new: dict, threshold: float,
             print(f"{name:30s} {b or '—':>14} {n or '—':>14}   {status}")
             continue
         ratio = n / b if b else float("inf")
-        flag = ""
-        if ratio > hard_threshold:
-            flag = f"  FAIL >{hard_threshold:g}x baseline"
-            failures += 1
-        elif ratio > threshold:
-            flag = f"  WARN >{threshold:g}x baseline"
-            warnings += 1
-        print(f"{name:30s} {b:14.0f} {n:14.0f} {ratio:7.2f}{flag}")
+        print(f"{name:30s} {b:14.0f} {n:14.0f} {ratio:7.2f}"
+              f"{judge(ratio)}")
+        # derived latency/throughput keys present on both sides ride the
+        # same gate; _qps ratios invert so >1 always means "got worse"
+        bd = derived_metrics(baseline.get(name, {}))
+        nd = derived_metrics(new.get(name, {}))
+        for key in sorted(set(bd) & set(nd)):
+            bv, nv = bd[key], nd[key]
+            if bv <= 0 or nv <= 0:
+                continue
+            r = (nv / bv) if key.endswith("_ms") else (bv / nv)
+            print(f"{name + '.' + key:30s} {bv:14.3f} {nv:14.3f} "
+                  f"{r:7.2f}{judge(r)}")
     return warnings, failures
 
 

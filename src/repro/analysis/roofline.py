@@ -111,3 +111,63 @@ def dominant_term(terms: dict) -> str:
     vals = {"compute": terms["compute_s"], "memory": terms["memory_s"],
             "collective": terms["collective_s"]}
     return max(vals, key=vals.get)
+
+
+# ---------------------------------------------------------------------------
+# Per-tile kernel arithmetic intensity (static, from the kernels' own block
+# shapes — no compile needed). One grid step of each Pallas kernel moves
+# `bytes` through VMEM and does `flops` MXU work; intensity = flops/byte
+# against the machine ridge point PEAK/HBM_BW says which side of the
+# roofline the kernel's inner loop sits on.
+# ---------------------------------------------------------------------------
+
+def _entry(name: str, flops: float, byts: float, note: str) -> dict:
+    intensity = flops / byts
+    ridge = PEAK_FLOPS_BF16 / HBM_BW
+    return {"kernel": name, "tile_flops": flops, "tile_bytes": byts,
+            "intensity": intensity, "ridge": ridge,
+            "bound": "compute" if intensity >= ridge else "memory",
+            "note": note}
+
+
+def gemm_intensity(bm: int = 128, bk: int = 128, bn: int = 128,
+                   itemsize: int = 4) -> dict:
+    """One (bm, bk)×(bk, bn) tile of `local_step.matmul_blocked` (the
+    im2col+GEMM local step): 2·bm·bk·bn FLOPs over A, B and the output
+    accumulator tile."""
+    flops = 2.0 * bm * bk * bn
+    byts = float(bm * bk + bk * bn + bm * bn) * itemsize
+    return _entry("gemm", flops, byts, f"bm={bm},bk={bk},bn={bn}")
+
+
+def flash_attention_intensity(bq: int = 128, bk: int = 128, hd: int = 64,
+                              itemsize: int = 4) -> dict:
+    """One (bq, bk) tile of `flash_attention_pallas` per head: the QKᵀ
+    score GEMM plus the PV accumulate (2·2·bq·bk·hd FLOPs) over the q, k,
+    v tiles and the (bq, hd) output accumulator."""
+    flops = 4.0 * bq * bk * hd
+    byts = float(bq * hd + 2 * bk * hd + bq * hd) * itemsize
+    return _entry("flash_attention", flops, byts, f"bq={bq},bk={bk},hd={hd}")
+
+
+def bgmv_intensity(block_n: int = 256, d_in: int = 2048, d_out: int = 2048,
+                   r: int = 8, itemsize: int = 4) -> dict:
+    """One (member, N-block) step of `bgmv.bgmv_pallas` (factored-serving
+    correction): x(bn,d_in)@u(d_in,r) then @v(d_out,r)ᵀ —
+    2·bn·r·(d_in+d_out) FLOPs over the x tile, both factor panels, and the
+    (bn, d_out) output. At serving ranks (r ≪ d) the x/out tiles dominate
+    bytes while FLOPs scale with r, so the kernel is memory-bound by
+    design — it exists to cut the S× *weight* traffic of the dense
+    vmapped ensemble, not to raise MXU utilization."""
+    flops = 2.0 * block_n * r * (d_in + d_out)
+    byts = float(block_n * d_in + d_in * r + d_out * r
+                 + block_n * d_out) * itemsize
+    return _entry("bgmv", flops, byts,
+                  f"block_n={block_n},d_in={d_in},d_out={d_out},r={r}")
+
+
+def kernel_intensities() -> list:
+    """The repo's Pallas kernels at their default tile shapes — the
+    EXPERIMENTS.md §Roofline kernel table (benchmarks/roofline_report.py
+    prints and persists these rows)."""
+    return [gemm_intensity(), flash_attention_intensity(), bgmv_intensity()]

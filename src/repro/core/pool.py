@@ -182,6 +182,18 @@ def _project_delta(delta: jax.Array, r: int, leaf_idx: int):
     return q, v
 
 
+class LeafDelta(NamedTuple):
+    """One base leaf's per-member delta in pool-native form: factor stacks
+    (u, v) for matrix leaves, a dense stack for the rest — exactly one side
+    is populated. A NamedTuple so a params-structured tree of these is
+    itself a pytree: jit/vmap see the factor arrays as leaves and the
+    (static) structure tells a factored forward which form each site has
+    (DESIGN.md §14)."""
+    u: Any        # (C, *lead, d_in, r) f32, or None for dense leaves
+    v: Any        # (C, *lead, d_out, r) f32, or None for dense leaves
+    dense: Any    # (C, *shape) f32, or None for factored leaves
+
+
 class LowRankDeltaPool(NamedTuple):
     """Factor-form pool: member t reconstructs as base + U_t @ V_tᵀ per
     matrix leaf (dense delta for the rest). Member 0 is the base itself
@@ -279,10 +291,32 @@ class LowRankDeltaPool(NamedTuple):
             out.append((b.astype(F32) + d).astype(b.dtype))
         return jax.tree.unflatten(jax.tree.structure(self.base), out)
 
+    def delta_tree(self) -> PyTree:
+        """The pool's deltas re-hung on the base params structure: a pytree
+        shaped like ``base`` whose every leaf position holds a `LeafDelta`
+        (factor stacks for matrix leaves, the dense stack otherwise). This
+        is the factored-serving handoff (`PoolServer.from_pool` keeps
+        factor form for models with a `forward_factored` hook, DESIGN.md
+        §14): a factored forward walks base params and deltas together —
+        ``deltas["layers"]["attn"]["wq"].u`` sits exactly where
+        ``params["layers"]["attn"]["wq"]`` does — so serving memory stays
+        M + C·r·(d_in+d_out) instead of the C·M densified stack."""
+        out = []
+        for i in range(len(jax.tree.leaves(self.base))):
+            k = _leaf_key(i)
+            if k in self.dense:
+                out.append(LeafDelta(None, None, self.dense[k]))
+            else:
+                out.append(LeafDelta(self.u[k], self.v[k], None))
+        return jax.tree.unflatten(jax.tree.structure(self.base), out)
+
     def materialize_members(self) -> PyTree:
-        """The full stacked member pytree (C leading axis) — the serving
-        handoff (`PoolServer.from_pool`): serving vmaps forwards over
-        stacked members, so factor pools densify once at server build."""
+        """The full stacked member pytree (C leading axis) — the DENSE
+        serving handoff (`PoolServer.from_pool` for models without a
+        factored forward, and the factored path's correctness oracle):
+        scoring then vmaps forwards over stacked members at C·M serving
+        memory. Models with a `forward_factored` hook serve from
+        `delta_tree()` instead (DESIGN.md §14)."""
         out = []
         for i, b in enumerate(jax.tree.leaves(self.base)):
             k = _leaf_key(i)

@@ -1,0 +1,99 @@
+"""Blocked BGMV kernel: batched low-rank corrections for factored serving.
+
+Punica/S-LoRA-style multi-adapter serving observes that S models differing
+only by rank-r deltas share one base GEMM: for member t with
+W_t = W_base + U_t V_tᵀ,
+
+    x @ W_t = x @ W_base + (x @ U_t) @ V_tᵀ
+
+so the ensemble pays the M-byte base weight read ONCE per query batch and
+each member only a rank-r "batched grouped matrix-vector" correction. This
+kernel is that correction term for a whole `LowRankDeltaPool` member axis
+in one grid:
+
+    x (S, N, d_in) or (N, d_in) shared  ×  u (S, d_in, r), v (S, d_out, r)
+      → (S, N, d_out) f32,   y_s = (x_s @ u_s) @ v_sᵀ
+
+Grid is (S, N-blocks): each step keeps one member's full (d_in, r) and
+(d_out, r) factor panels VMEM-resident (r ≤ 64 in practice, so the panels
+are KiB-scale) and streams a (block_n, d_in) activation tile through two
+small GEMMs — no cross-step accumulation, every output tile is written
+exactly once. The ragged N tail zero-pads to the block grid and is sliced
+off, like every kernel in this package.
+
+Shared-x form: when `x` has no member axis (the first layer of a factored
+forward, before activations diverge per member), the x BlockSpec maps every
+member row to the same tile — the activations are read once per member from
+VMEM, never duplicated in HBM.
+
+Routing follows `kernels/ops.py` discipline (DESIGN.md §5): Mosaic on TPU,
+interpret mode for tests, and the pure-jnp twin (`kernels/ref.bgmv_ref`) as
+the off-TPU production path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+
+F32 = jnp.float32
+
+BLOCK_N = 256            # activation rows per tile; (256, d) f32 ≤ 2 MiB VMEM
+
+
+def _bgmv_kernel(x_ref, u_ref, v_ref, out_ref):
+    """One (member, N-block) step: y = (x @ u) @ vᵀ, f32 accumulation.
+
+    x_ref is (block_n, d_in) for shared x or (1, block_n, d_in) for
+    per-member x — the reshape normalizes both layouts."""
+    x = x_ref[...].reshape(-1, x_ref.shape[-1]).astype(F32)   # (bn, d_in)
+    u = u_ref[0].astype(F32)                                  # (d_in, r)
+    v = v_ref[0].astype(F32)                                  # (d_out, r)
+    t = jax.lax.dot_general(x, u, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)       # (bn, r)
+    y = jax.lax.dot_general(t, v, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)       # (bn, d_out)
+    out_ref[0] = y
+
+
+def bgmv_pallas(x, u, v, *, block_n: int = BLOCK_N, interpret: bool = False):
+    """The blocked correction sweep. x: (S, N, d_in) per-member activations
+    or (N, d_in) shared; u: (S, d_in, r); v: (S, d_out, r) → (S, N, d_out)
+    f32. Oracle: `kernels.ref.bgmv_ref`."""
+    s, d_in, r = u.shape
+    d_out = v.shape[1]
+    shared = x.ndim == 2
+    n = x.shape[-2]
+    assert x.shape == ((n, d_in) if shared else (s, n, d_in)), \
+        (x.shape, u.shape)
+    assert v.shape == (s, d_out, r), (v.shape, u.shape)
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:                       # ragged tail: zero rows, sliced off below
+        width = ((0, pad), (0, 0)) if shared else ((0, 0), (0, pad), (0, 0))
+        x = jnp.pad(x, width)
+    n_blocks = (n + pad) // block_n
+
+    if shared:
+        x_spec = pl.BlockSpec((block_n, d_in), lambda i, j: (j, 0))
+    else:
+        x_spec = pl.BlockSpec((1, block_n, d_in), lambda i, j: (i, j, 0))
+    out = pl.pallas_call(
+        _bgmv_kernel,
+        grid=(s, n_blocks),
+        in_specs=[
+            x_spec,
+            pl.BlockSpec((1, d_in, r), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d_out, r), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, d_out), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, n + pad, d_out), F32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(x, u, v)
+    return out[:, :n] if pad else out

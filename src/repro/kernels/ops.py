@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.bgmv import bgmv_pallas
 from repro.kernels.chunk_scan import gla_chunk_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.local_step import conv2d_gemm, maxpool2x2, sgd_update_tree
@@ -135,6 +136,21 @@ def gla_chunked(q, k, v, log_decay, *, chunk: int, pre=False, bonus=None,
 # hot path. No jit wrappers here — these are always called from inside the
 # trainer's compiled step programs (or a jitted eval), never eagerly.
 # ---------------------------------------------------------------------------
+
+def bgmv(x, u, v):
+    """Batched low-rank serving correction y_s = (x_s @ u_s) @ v_tᵀ over the
+    pool-member axis (`kernels/bgmv.py`, DESIGN.md §14) — the per-member
+    term of the factored ensemble forward `x@W_t = x@W_base + (x@U_t)@V_tᵀ`.
+    x: (S, N, d_in) or shared (N, d_in); u (S, d_in, r); v (S, d_out, r) →
+    (S, N, d_out) f32. Called from inside the server's compiled scoring
+    programs, so no jit wrapper; Pallas on TPU, the `ref.bgmv_ref` jnp twin
+    elsewhere (interpret-mode Pallas in a scoring loop is strictly slower
+    than XLA's fused lowering, same routing as the local-step ops)."""
+    if _use_pallas():
+        return bgmv_pallas(x, u, v, interpret=_interpret())
+    from repro.kernels.ref import bgmv_ref
+    return bgmv_ref(x, u, v)
+
 
 def fused_conv2d(x, w, b):
     """SAME stride-1 NHWC conv as im2col + blocked GEMM — forward and

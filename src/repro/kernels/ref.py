@@ -48,6 +48,20 @@ def factor_gram_ref(a):
     return jnp.einsum("...mp,...np->...mn", af, af)
 
 
+def bgmv_ref(x, u, v):
+    """f32 batched low-rank correction — oracle for `bgmv.bgmv_pallas`
+    (DESIGN.md §14): y_s = (x_s @ u_s) @ v_sᵀ per pool member.
+
+    x: (S, N, d_in) per-member activations or (N, d_in) shared;
+    u: (S, d_in, r); v: (S, d_out, r) → (S, N, d_out)."""
+    xf, uf, vf = (a.astype(jnp.float32) for a in (x, u, v))
+    if x.ndim == 2:
+        t = jnp.einsum("nd,sdr->snr", xf, uf)
+    else:
+        t = jnp.einsum("snd,sdr->snr", xf, uf)
+    return jnp.einsum("snr,sor->sno", t, vf)
+
+
 def matmul_ref(a, b):
     """f32 GEMM ground truth for `local_step.matmul_blocked`."""
     return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,231 @@
+"""Factored ensemble forwards: serve a `LowRankDeltaPool` without densifying.
+
+Member t of a factor pool is ``base + U_t @ V_tᵀ`` per matrix leaf, so every
+linear site satisfies
+
+    x @ W_t = x @ W_base + (x @ U_t) @ V_tᵀ
+
+and the ensemble forward can read the M-byte base weights ONCE per query
+batch — each member pays only a rank-r BGMV correction (`kernels/bgmv.py`)
+instead of its own full weight sweep. Activations still diverge per member
+after the first correction (nonlinearities don't factor), so tensors here
+carry a leading pool axis S: FLOPs match the dense vmapped ensemble, the
+win is weight traffic and serving memory (M + factors vs S·M — DESIGN.md
+§14).
+
+The capability hook mirrors `kernels/local_step.FUSED_LOSS_ATTR`: a model
+family that supports factored serving sets
+
+    setattr(model.forward, FACTORED_FORWARD_ATTR,
+            forward_factored)           # (base, deltas, batch) -> logits
+
+where ``deltas`` is `LowRankDeltaPool.delta_tree()` — a params-structured
+pytree of `LeafDelta`s. `serve/engine.PoolServer.from_pool` probes the hook
+via `factored_forward_for` and falls back to the densified vmap path for
+models without it; the dense path stays the correctness oracle (factored
+scores match it to GEMM-reassociation tolerance, exactly at full rank).
+
+Numerics: every helper accumulates in f32 (`preferred_element_type`) and
+casts back to the activation dtype exactly where `models/layers.py` does,
+so on the float32 reduced configs the only factored-vs-dense divergence is
+the reassociated low-rank GEMM itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pool import LeafDelta
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.layers import ACC
+
+# Hook attribute on `model.forward`; see module docstring.
+FACTORED_FORWARD_ATTR = "forward_factored"
+
+
+def factored_forward_for(forward):
+    """The model's factored forward, or None — the `PoolServer.from_pool`
+    probe (same shape as `local_step.fused_loss_for`)."""
+    return getattr(forward, FACTORED_FORWARD_ATTR, None)
+
+
+def densify_delta(d: LeafDelta) -> jax.Array:
+    """(C, *lead, d_in, d_out) dense delta stack from either LeafDelta form
+    — used for leaves too small/oddly-shaped to stream through BGMV (norm
+    scales, biases: their bytes are negligible)."""
+    if d.dense is not None:
+        return d.dense
+    return jnp.einsum("...ir,...or->...io", d.u, d.v)
+
+
+def _map_deltas(f, base, deltas):
+    """Map f(base_leaf, LeafDelta) across a params tree and its delta tree
+    (the delta tree has one LeafDelta per base leaf, same structure)."""
+    dl, treedef = jax.tree.flatten(
+        deltas, is_leaf=lambda x: isinstance(x, LeafDelta))
+    return jax.tree.unflatten(
+        treedef, [f(b, d) for b, d in zip(jax.tree.leaves(base), dl)])
+
+
+# ---------------------------------------------------------------------------
+# Factored layer primitives. Convention: activations carry a leading pool
+# axis S — (S, B, T, D) at transformer sites, (S, N, D) (or shared (N, D))
+# at plain dense-layer sites.
+# ---------------------------------------------------------------------------
+
+def fdense(x, w, d, b=None, db=None):
+    """Factored 2-D dense layer: x (N, d_in) shared across members (the
+    true base-computed-once site — first layer of an MLP head) or
+    (S, N, d_in) per-member. Returns (S, N, d_out) f32."""
+    shared = x.ndim == 2
+    xf = x.astype(ACC)
+    y = jnp.einsum("...nd,df->...nf", xf, w.astype(ACC))
+    if d.dense is not None:
+        corr = jnp.einsum("nd,sdf->snf" if shared else "snd,sdf->snf",
+                          xf, d.dense)
+    else:
+        corr = ops.bgmv(x, d.u, d.v)
+    y = (y[None] if shared else y) + corr
+    if b is not None:
+        y = y + b.astype(ACC)
+    if db is not None:
+        y = y + db.dense[:, None, :]
+    return y
+
+
+def fproj(x, w, d, b=None, db=None):
+    """Factored `layers._proj`: x (S, B, T, d_in) per-member activations,
+    w the (d_in, d_out) base weight, d its LeafDelta; b/db the optional
+    base bias and its (always-dense) LeafDelta. The base GEMM reads w once
+    for all S members (S folds into the contraction batch); the member
+    term streams through the BGMV kernel."""
+    s, bb, t, d_in = x.shape
+    y = jnp.einsum("sbtd,df->sbtf", x, w, preferred_element_type=ACC)
+    if d.dense is not None:
+        y = y + jnp.einsum("sbtd,sdf->sbtf", x.astype(ACC), d.dense)
+    else:
+        corr = ops.bgmv(x.reshape(s, bb * t, d_in), d.u, d.v)
+        y = y + corr.reshape(s, bb, t, -1)
+    if b is not None:
+        y = y + b.astype(ACC)
+    if db is not None:
+        y = y + db.dense[:, None, None, :]
+    return y.astype(x.dtype)
+
+
+def frms(p, d, x, eps):
+    """Per-member `layers.rms_norm`: base scale + each member's dense scale
+    delta. x (S, ..., D); d["scale"].dense (S, D)."""
+    xf = x.astype(ACC)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(ACC) + d["scale"].dense
+    scale = scale.reshape(
+        (scale.shape[0],) + (1,) * (x.ndim - 2) + (scale.shape[-1],))
+    return (y * scale).astype(x.dtype)
+
+
+def fembed(embed, d, tokens):
+    """Per-member embedding gather: base rows once + each member's low-rank
+    row correction ``U[tok] @ Vᵀ``. tokens (B, T) → (S, B, T, D) in the
+    embed dtype (gather commutes with the densify-then-cast of the dense
+    path, so this is exact, not just close)."""
+    x = jnp.take(embed, tokens, axis=0).astype(ACC)      # (B, T, D)
+    if d.dense is not None:
+        corr = jnp.take(d.dense, tokens, axis=1)         # (S, B, T, D)
+    else:
+        ut = jnp.take(d.u, tokens, axis=1)               # (S, B, T, r)
+        corr = jnp.einsum("sbtr,sdr->sbtd", ut, d.v)
+    return (x[None] + corr).astype(embed.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer factored forward (dense GQA family)
+# ---------------------------------------------------------------------------
+
+def _normalize_layer_deltas(base_layers, layer_deltas):
+    """Densify layer-stack deltas whose base leaf is not an (L, d_in, d_out)
+    matrix batch — 2-D leaves like (L, D) norm scales / (L, f) biases may
+    have been factored by the pool (it treats trailing dims ≥ FACTOR_MIN as
+    a matrix), but per-layer they are vectors and must scan as dense
+    (C, L, ...) stacks. The real matmul weights keep factor form."""
+    def fix(b, d):
+        if d.dense is None and b.ndim < 3:
+            return LeafDelta(None, None, densify_delta(d))
+        return d
+    return _map_deltas(fix, base_layers, layer_deltas)
+
+
+def _fattn(p, d, cfg, x, positions):
+    """Factored `layers.self_attention`: QKV/O projections via fproj, the
+    S axis folded into the flash-attention batch (members attend
+    independently — attention itself has no weights to factor)."""
+    s, b, t, _ = x.shape
+    nh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = fproj(x, p["wq"], d["wq"], p.get("bq"), d.get("bq"))
+    k = fproj(x, p["wk"], d["wk"], p.get("bk"), d.get("bk"))
+    v = fproj(x, p["wv"], d["wv"], p.get("bv"), d.get("bv"))
+    q = L.apply_rope(q.reshape(s * b, t, nh, hd), positions, cfg.rope_theta)
+    k = L.apply_rope(k.reshape(s * b, t, kv, hd), positions, cfg.rope_theta)
+    o = L.flash_attention(q, k, v.reshape(s * b, t, kv, hd), causal=True,
+                          window=cfg.sliding_window)
+    return fproj(o.reshape(s, b, t, nh * hd), p["wo"], d["wo"])
+
+
+def _fmlp(p, d, x):
+    """Factored SwiGLU (`layers.mlp`)."""
+    g = fproj(x, p["w_gate"], d["w_gate"])
+    u = fproj(x, p["w_up"], d["w_up"])
+    y = (jax.nn.silu(g.astype(ACC)) * u.astype(ACC)).astype(x.dtype)
+    return fproj(y, p["w_down"], d["w_down"])
+
+
+def _fblock(lp, ld, cfg, x, positions):
+    h = frms(lp["ln1"], ld["ln1"], x, cfg.norm_eps)
+    x = x + _fattn(lp["attn"], ld["attn"], cfg, h, positions)
+    h = frms(lp["ln2"], ld["ln2"], x, cfg.norm_eps)
+    return x + _fmlp(lp["ffn"], ld["ffn"], h)
+
+
+def _flm_logits(params, deltas, cfg, h):
+    """Factored `transformer.lm_logits`: (S, B, T, D) → (S, B, T, V) f32.
+    Tied embeddings swap the factor roles — member unembed is
+    (embed + U Vᵀ)ᵀ = embedᵀ + V Uᵀ, so the correction is bgmv(h, V, U)."""
+    h = frms(params["final_norm"], deltas["final_norm"], h, cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    y = jnp.einsum("sbtd,dv->sbtv", h, w, preferred_element_type=ACC)
+    s, b, t, dd = h.shape
+    hr = h.reshape(s, b * t, dd)
+    d = deltas["embed"] if cfg.tie_embeddings else deltas["lm_head"]
+    if d.dense is not None:
+        dd_ = d.dense
+        eq = "sbtd,svd->sbtv" if cfg.tie_embeddings else "sbtd,sdv->sbtv"
+        return y + jnp.einsum(eq, h.astype(ACC), dd_)
+    fu, fv = ((d.v, d.u) if cfg.tie_embeddings else (d.u, d.v))
+    return y + ops.bgmv(hr, fu, fv).reshape(s, b, t, -1)
+
+
+def make_decoder_factored(cfg):
+    """The `forward_factored(base, deltas, batch)` hook for the dense
+    decoder-only family (`transformer.build_decoder_only` registers it when
+    cfg has neither MoE nor MLA — those families densify for now)."""
+
+    def forward_factored(params, deltas, batch):
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = fembed(params["embed"], deltas["embed"], tokens)   # (S, B, T, D)
+        s = x.shape[0]
+        positions = jnp.broadcast_to(jnp.arange(t), (s * b, t))
+        layer_deltas = jax.tree.map(
+            lambda a: jnp.swapaxes(a, 0, 1),
+            _normalize_layer_deltas(params["layers"], deltas["layers"]))
+
+        def layer(x, xs):
+            lp, ld = xs
+            return _fblock(lp, ld, cfg, x, positions), None
+
+        x, _ = jax.lax.scan(layer, x, (params["layers"], layer_deltas))
+        return _flm_logits(params, deltas, cfg, x)
+
+    return forward_factored

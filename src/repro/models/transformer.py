@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.models.factored import (FACTORED_FORWARD_ATTR,
+                                   make_decoder_factored)
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
@@ -211,6 +213,14 @@ def build_decoder_only(cfg: ArchConfig) -> Model:
     def forward(params, batch):
         x, _ = backbone(params, batch["tokens"])
         return lm_logits(params, cfg, x)
+
+    # Factored-serving capability hook (models/factored.py): the dense GQA
+    # family threads `LowRankDeltaPool` deltas through every matmul site
+    # without densifying members. MoE/MLA variants have routing/latent
+    # sites the factored path doesn't cover yet — they fall back to the
+    # densified vmap in `PoolServer.from_pool`.
+    if cfg.moe is None and cfg.mla is None:
+        setattr(forward, FACTORED_FORWARD_ATTR, make_decoder_factored(cfg))
 
     def loss_fn(params, batch):
         x, aux = backbone(params, batch["tokens"])

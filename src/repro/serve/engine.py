@@ -26,23 +26,43 @@ request latency. The server compiles ONE scoring program:
 Pool-backend note: a `ModelPool` serves all live members; a `MomentPool`
 only materializes its running mean (members are not retained by
 construction), so its "ensemble" is the single averaged model — same
-scoring path, P = 1. A `LowRankDeltaPool` densifies base + U_tV_tᵀ once
-at server build (`materialize_members`) — scoring vmaps forwards over
-stacked members, so serving memory is C·M even when training memory was
-factor-form (DESIGN.md §13).
+scoring path, P = 1. A `LowRankDeltaPool` serves in FACTOR form when the
+model's forward carries the `models/factored.py` capability hook
+(`forward_factored`): the server keeps base params + the pool's
+`delta_tree()` (`FactoredMembers`), the compiled scoring program reads the
+M-byte base weights once per batch and applies per-member rank-r BGMV
+corrections (`kernels/bgmv.py`), and serving memory stays
+M + C·r·(d_in+d_out) instead of the C·M densified stack (DESIGN.md §14).
+Models without the hook (or `from_pool(..., factored=False)`) fall back to
+densifying once at server build (`materialize_members`) and vmapping —
+that dense path remains the correctness oracle for the factored one.
+Everything above the forward — reduction head, weights/`weight_fn`,
+bucketing, device-resident gathers — is identical in both modes.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pool import LowRankDeltaPool, ModelPool, MomentPool
+from repro.models.factored import (FACTORED_FORWARD_ATTR,
+                                   factored_forward_for)
 
 PyTree = Any
 F32 = jnp.float32
+
+
+class FactoredMembers(NamedTuple):
+    """Factor-form serving stack: the shared base params plus the pool's
+    `delta_tree()` (a params-structured pytree of `LeafDelta`s, capacity
+    leading axis). Stands in for the stacked member pytree wherever the
+    server passes `members` — including into `weight_fn` hooks, which see
+    this NamedTuple on a factored server."""
+    base: PyTree
+    deltas: PyTree
 
 # Power-of-~4 ladder: small enough that single requests don't pay a
 # 128-wide forward, coarse enough that a trace compiles ≤ 4 programs.
@@ -57,21 +77,26 @@ def _reduce(mode: str, w: jax.Array, logits: jax.Array) -> jax.Array:
 
     The mean_logits expression is the pinned serving reference: tests
     recompute it from per-member forward calls and assert bit-equality.
+    majority_vote normalizes by the same w.sum(), so vote scores are the
+    weighted *fraction* of member mass per class (summing to 1 over
+    classes) — matching the documented weighted-reduction contract rather
+    than scaling with member count.
     """
     wf = w.reshape((w.shape[0],) + (1,) * (logits.ndim - 1))
     if mode == "mean_logits":
         return (wf * logits).sum(0) / w.sum()
     votes = jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1],
                            dtype=logits.dtype)
-    return (wf * votes).sum(0)
+    return (wf * votes).sum(0) / w.sum()
 
 
 class PoolServer:
     """One trained pool (or collapsed model) compiled for query scoring.
 
-    `members` is a stacked pytree with a leading pool axis P; `mask` is a
-    (P,) float32 of live slots (zero-padded slots score with weight 0).
-    Use the classmethod constructors — `from_pool`, `from_params`,
+    `members` is a stacked pytree with a leading pool axis P — or a
+    `FactoredMembers` (base + delta tree) for factor-form serving; `mask`
+    is a (P,) float32 of live slots (zero-padded slots score with weight
+    0). Use the classmethod constructors — `from_pool`, `from_params`,
     `from_result`, `from_checkpoint` — rather than building the stack by
     hand.
     """
@@ -100,19 +125,34 @@ class PoolServer:
         # dead slots never vote, whatever the hook returned
         self.weights = w * self.mask
         self.n_members = int(self.mask.sum())
+        self.factored = isinstance(members, FactoredMembers)
         fwd, mode_ = model.forward, mode
+        if self.factored:
+            ffwd = factored_forward_for(fwd)
+            if ffwd is None:
+                raise ValueError(
+                    "FactoredMembers given but model.forward has no "
+                    f"'{FACTORED_FORWARD_ATTR}' hook (models/factored.py)")
+
+            def member_logits(members, batch):
+                # shared-base forward + per-member BGMV corrections; dead
+                # slots carry zero deltas, so they score exactly as base —
+                # identical to the densified stack's zero-padded slots
+                # (their weight is zero either way).
+                return ffwd(members.base, members.deltas, batch)
+        else:
+            def member_logits(members, batch):
+                return jax.vmap(lambda m: fwd(m, batch))(members)
 
         @jax.jit
         def score_batch(members, w, batch):
-            logits = jax.vmap(lambda m: fwd(m, batch))(members)
-            scores = _reduce(mode_, w, logits)
+            scores = _reduce(mode_, w, member_logits(members, batch))
             return scores, jnp.argmax(scores, -1)
 
         @jax.jit
         def score_idx(members, w, arrays, idx):
             batch = {k: a[idx] for k, a in arrays.items()}
-            logits = jax.vmap(lambda m: fwd(m, batch))(members)
-            scores = _reduce(mode_, w, logits)
+            scores = _reduce(mode_, w, member_logits(members, batch))
             return scores, jnp.argmax(scores, -1)
 
         self._score_batch = score_batch
@@ -121,14 +161,32 @@ class PoolServer:
     # -- constructors -------------------------------------------------------
 
     @classmethod
-    def from_pool(cls, model, pool, **kw) -> "PoolServer":
-        """Serve a trained pool: every live `ModelPool` member, every
-        reconstructed `LowRankDeltaPool` member (base + U_tV_tᵀ, densified
-        once here), or the moment-form running mean (P = 1; see module
-        docstring)."""
+    def from_pool(cls, model, pool, *, factored: Optional[bool] = None,
+                  **kw) -> "PoolServer":
+        """Serve a trained pool: every live `ModelPool` member, a
+        `LowRankDeltaPool` in factor form (shared-base forward + BGMV
+        corrections) when the model carries the `forward_factored` hook —
+        densified once otherwise — or the moment-form running mean (P = 1;
+        see module docstring).
+
+        `factored`: None (default) auto-routes on the hook; True requires
+        it (raises if absent); False forces the densified vmap path (the
+        correctness oracle)."""
         if isinstance(pool, ModelPool):
             return cls(model, pool.members, pool.mask(), **kw)
         if isinstance(pool, LowRankDeltaPool):
+            hook = factored_forward_for(model.forward)
+            if factored is None:
+                factored = hook is not None
+            if factored:
+                if hook is None:
+                    raise ValueError(
+                        "factored=True but model.forward has no "
+                        f"'{FACTORED_FORWARD_ATTR}' hook; use "
+                        "factored=False (or None) for the densified path")
+                return cls(model,
+                           FactoredMembers(pool.base, pool.delta_tree()),
+                           pool.mask(), **kw)
             return cls(model, pool.materialize_members(), pool.mask(), **kw)
         if isinstance(pool, MomentPool):
             return cls.from_params(model, pool.average(), **kw)

@@ -43,6 +43,11 @@ class _Strategies:
                          [min_value, max_value])
 
     @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)),
+                         [False, True])
+
+    @staticmethod
     def sampled_from(elements) -> _Strategy:
         elements = list(elements)
         return _Strategy(lambda rng: rng.choice(elements), list(elements))

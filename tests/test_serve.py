@@ -152,9 +152,9 @@ def test_majority_vote_and_weight_hook():
         np.random.default_rng(5).normal(size=(6, 4)).astype(np.float32))}
     mv = PoolServer.from_result(model, result, mode="majority_vote")
     votes, preds = mv.score_batch(batch)
-    # vote mass equals the number of live members, for every request
-    np.testing.assert_allclose(np.asarray(votes).sum(-1), mv.n_members,
-                               rtol=1e-6)
+    # votes are the weighted FRACTION of member mass per class — mass is
+    # exactly 1.0 per request (the normalized weighted-reduction contract)
+    np.testing.assert_allclose(np.asarray(votes).sum(-1), 1.0, rtol=1e-6)
     # the density-weighting hook: zeroing all but one member makes the
     # ensemble that single member
     pool = result.final_pool
